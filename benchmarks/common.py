@@ -1,0 +1,96 @@
+"""Shared benchmark utilities: db factories, key generators, timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import LSMConfig, LSMStore
+
+# Scaled for the 1-core container; pass --full for paper-scale runs.
+DEFAULT_N = 200_000
+
+
+def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
+            bits_per_key: float = 0.0, bloom_allocation: str = "monkey",
+            memtable_kb: int = 32, base_kb: int = 128) -> LSMStore:
+    """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
+    container-scale datasets so the tree reaches realistic depths (L=4..9)."""
+    return LSMStore(LSMConfig(
+        policy=policy, c=c, T=T,
+        memtable_bytes=memtable_kb << 10,
+        base_level_bytes=base_kb << 10,
+        bits_per_key=bits_per_key,
+        bloom_allocation=bloom_allocation))
+
+
+def fill_random(db: LSMStore, n: int, value_size: int, seed: int = 1,
+                key_space: Optional[int] = None) -> float:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space or (n * 8), n, dtype=np.uint64)
+    val = bytes(value_size)
+    t0 = time.perf_counter()
+    for k in keys:
+        db.put(int(k), val)
+    db.flush()
+    return (time.perf_counter() - t0) / n * 1e6  # us/op
+
+
+def fill_seq(db: LSMStore, n: int, value_size: int) -> float:
+    val = bytes(value_size)
+    t0 = time.perf_counter()
+    for k in range(n):
+        db.put(k, val)
+    db.flush()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def read_random(db: LSMStore, n_ops: int, key_space: int,
+                seed: int = 2) -> float:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, n_ops, dtype=np.uint64)
+    t0 = time.perf_counter()
+    for k in keys:
+        db.get(int(k))
+    return (time.perf_counter() - t0) / n_ops * 1e6
+
+
+def seek_random(db: LSMStore, n_ops: int, key_space: int, nexts: int = 0,
+                seed: int = 3) -> float:
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, n_ops, dtype=np.uint64)
+    t0 = time.perf_counter()
+    if nexts == 0:
+        for k in keys:
+            db.seek(int(k))
+    else:
+        for k in keys:
+            db.scan(int(k), nexts)
+    return (time.perf_counter() - t0) / n_ops * 1e6
+
+
+class Zipfian:
+    """YCSB's zipfian generator (theta=0.99) over [0, n)."""
+
+    def __init__(self, n: int, theta: float = 0.99, seed: int = 7):
+        self.n = n
+        self.theta = theta
+        self.rng = np.random.default_rng(seed)
+        zeta = np.cumsum(1.0 / np.arange(1, n + 1) ** theta)
+        self.zeta_n = zeta[-1]
+        self.cdf = zeta / self.zeta_n
+
+    def sample(self, size: int) -> np.ndarray:
+        u = self.rng.random(size)
+        return np.searchsorted(self.cdf, u)
+
+
+def fnv_scramble(x: np.ndarray) -> np.ndarray:
+    """YCSB-style key scrambling so zipf-hot keys spread over the space."""
+    from repro.core.types import splitmix64
+    return splitmix64(x.astype(np.uint64))
+
+
+def pct(vals: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(vals), q))

@@ -1,0 +1,84 @@
+"""§Perf hillclimb driver: tagged dry-run variants for the three chosen cells.
+
+Cells (chosen per the assignment from the baseline roofline table):
+  A. minicpm_2b/prefill_32k    — worst roofline fraction (memory-dominated:
+                                 36-head MHA at 32k, fp32 softmax chain)
+  B. recurrentgemma_2b/train_4k — most collective-bound (dense RG-LRU gate
+                                 matmuls force per-layer all-gathers)
+  C. qwen3_4b/decode_32k       — most representative of the paper (AutumnKV
+                                 serving read path: KV-cache-bound decode)
+
+Each iteration is a config-level change; artifacts are tagged and the
+before/after terms land in EXPERIMENTS.md §Perf.
+
+Run AFTER the main dry-run sweep:  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.launch.dryrun import run_cell
+
+
+def show(tag, r):
+    if r["status"] != "ok":
+        print(f"  {tag}: {r['status']} {r.get('error','')[:120]}")
+        return
+    h = r["hlo_cost"]
+    rf = r.get("roofline", {})
+    print(f"  {tag:28s} mem={h['hbm_bytes_per_device']/819e9:8.3f}s "
+          f"coll={h['collective_bytes_per_device']/50e9:8.3f}s "
+          f"comp={h['flops_per_device']/197e12:8.3f}s "
+          f"peak={r['memory_analysis']['peak_estimate_bytes']/2**30:6.2f}GiB "
+          f"frac={rf.get('roofline_fraction', 0):.4f}")
+
+
+def main():
+    # ---- Cell A: minicpm prefill ------------------------------------------
+    print("[A] minicpm_2b / prefill_32k")
+    base = get_config("minicpm_2b")
+    show("baseline(q_chunk=512)",
+         run_cell("minicpm_2b", "prefill_32k", False, force=True))
+    it1 = dataclasses.replace(base, scores_dtype="bfloat16")
+    show("it1: scores bf16",
+         run_cell("minicpm_2b", "prefill_32k", False, force=True,
+                  tag="_it1", cfg_override=it1))
+    it2 = dataclasses.replace(base, scores_dtype="bfloat16", q_chunk=256)
+    show("it2: + q_chunk 256",
+         run_cell("minicpm_2b", "prefill_32k", False, force=True,
+                  tag="_it2", cfg_override=it2))
+
+    # ---- Cell B: recurrentgemma train -------------------------------------
+    print("[B] recurrentgemma_2b / train_4k")
+    base = get_config("recurrentgemma_2b")
+    show("baseline(dense gates)",
+         run_cell("recurrentgemma_2b", "train_4k", False, force=True))
+    it1 = dataclasses.replace(
+        base, rglru=dataclasses.replace(base.rglru, gate_blocks=16))
+    show("it1: block-diag gates",
+         run_cell("recurrentgemma_2b", "train_4k", False, force=True,
+                  tag="_it1", cfg_override=it1))
+    it2 = dataclasses.replace(it1, scores_dtype="bfloat16")
+    show("it2: + scores bf16",
+         run_cell("recurrentgemma_2b", "train_4k", False, force=True,
+                  tag="_it2", cfg_override=it2))
+
+    # ---- Cell C: qwen3 decode ---------------------------------------------
+    print("[C] qwen3_4b / decode_32k")
+    base = get_config("qwen3_4b")
+    show("current(grouped+in-place)",
+         run_cell("qwen3_4b", "decode_32k", False, force=True))
+    it1 = dataclasses.replace(base, scores_dtype="bfloat16")
+    show("it1: scores bf16",
+         run_cell("qwen3_4b", "decode_32k", False, force=True,
+                  tag="_it1", cfg_override=it1))
+    it2 = dataclasses.replace(it1, param_dtype="bfloat16")
+    show("it2: + params bf16",
+         run_cell("qwen3_4b", "decode_32k", False, force=True,
+                  tag="_it2", cfg_override=it2))
+
+
+if __name__ == "__main__":
+    main()

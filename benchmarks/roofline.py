@@ -1,0 +1,84 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads benchmarks/artifacts/*.json (produced by repro.launch.dryrun), prints
+per (arch x shape) on the single-pod mesh:
+  compute / memory / collective terms (seconds/step, per-chip),
+  dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, roofline fraction,
+plus the multi-pod pass/fail summary.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = Path(__file__).resolve().parent / "artifacts"
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def load(mesh: str = "pod16x16", tag: str = "") -> List[Dict]:
+    rows = []
+    for p in sorted(ARTIFACT_DIR.glob(f"*__{mesh}{tag}.json")):
+        a = json.loads(p.read_text())
+        if tag == "" and a.get("tag"):
+            continue
+        rows.append(a)
+    return rows
+
+
+def terms_of(a: Dict) -> Optional[Dict]:
+    if a.get("status") != "ok":
+        return None
+    h = a["hlo_cost"]
+    compute = h["flops_per_device"] / PEAK
+    memory = h["hbm_bytes_per_device"] / HBM
+    coll = h["collective_bytes_per_device"] / ICI
+    terms = dict(compute_s=compute, memory_s=memory, collective_s=coll)
+    dom = max(terms, key=terms.get)
+    r = a.get("roofline", {})
+    mf = r.get("model_flops_per_chip", 0.0)
+    return dict(terms, dominant=dom.replace("_s", ""),
+                model_flops_per_chip=mf,
+                useful=mf / h["flops_per_device"] if h["flops_per_device"]
+                else 0.0,
+                fraction=(mf / PEAK) / max(terms.values())
+                if max(terms.values()) > 0 else 0.0,
+                peak_gib=a["memory_analysis"]["peak_estimate_bytes"] / 2**30)
+
+
+def table(tag: str = "") -> List[Dict]:
+    rows = []
+    for a in load("pod16x16", tag):
+        t = terms_of(a)
+        base = dict(arch=a["arch"], shape=a["shape"], status=a["status"])
+        if t:
+            base.update(t)
+        else:
+            base["reason"] = a.get("reason", a.get("error", ""))[:60]
+        rows.append(base)
+    return rows
+
+
+def main():
+    print("arch,shape,status,dominant,compute_s,memory_s,collective_s,"
+          "useful_flop_ratio,roofline_fraction,peak_GiB")
+    for r in table():
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},{r['status']},,,,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},ok,{r['dominant']},"
+              f"{r['compute_s']:.4g},{r['memory_s']:.4g},"
+              f"{r['collective_s']:.4g},{r['useful']:.3f},"
+              f"{r['fraction']:.4f},{r['peak_gib']:.2f}")
+    mp = load("pod2x16x16")
+    ok = sum(1 for a in mp if a["status"] == "ok")
+    sk = sum(1 for a in mp if a["status"] == "skipped")
+    er = len(mp) - ok - sk
+    print(f"# multi-pod 2x16x16: ok={ok} skipped={sk} err={er}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 3: write and small-range-read sensitivity to c and T.
+
+FillRandom then SeekRandomNext10, varying c in [0.4, 1.0] with T in {3, 5}.
+Expected (paper §4.2.2): lower c => fewer levels => better reads, worse
+writes; higher T => fewer levels => better reads.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from .common import DEFAULT_N, fill_random, make_db, seek_random
+
+
+def run(n: int = DEFAULT_N // 2) -> List[Dict]:
+    rows = []
+    for T in (3.0, 5.0):
+        for c in (0.4, 0.6, 0.8, 1.0):
+            db = make_db(c=c, T=T)
+            t_write = fill_random(db, n, 100)
+            t_range = seek_random(db, max(n // 8, 500), n * 8, nexts=10)
+            rows.append(dict(T=T, c=c, levels=db.num_levels_in_use,
+                             fillrandom_us=t_write, seeknext10_us=t_range,
+                             write_amp=db.stats.write_amplification(),
+                             predicted_L=db.policy.predicted_levels(
+                                 db.total_entries * 116,
+                                 db.config.base_level_bytes)))
+    return rows
+
+
+def main(n: int = DEFAULT_N // 2):
+    rows = run(n)
+    print("T,c,levels,predicted_L,fillrandom_us,seeknext10_us,write_amp")
+    for r in rows:
+        print(f"{r['T']:.0f},{r['c']:.1f},{r['levels']},{r['predicted_L']:.1f},"
+              f"{r['fillrandom_us']:.2f},{r['seeknext10_us']:.2f},"
+              f"{r['write_amp']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

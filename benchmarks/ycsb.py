@@ -1,0 +1,119 @@
+"""Paper Fig. 4 + Table 3: YCSB core workloads A-F.
+
+Load + six workloads with zipfian (0.99) key selection, comparing RocksDB
+(Leveling) vs Autumn c=.8 vs Autumn c=.4, reporting throughput (kops/s),
+avg/p95/p99 read latencies, write stalls, and space amplification — the
+paper's §4.3 metrics at container scale.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import LSMStore
+
+from .common import Zipfian, fnv_scramble, make_db, pct
+
+VALUE = 256   # scaled from the paper's 1 KB
+
+
+def _load(db: LSMStore, n: int) -> Dict:
+    val = bytes(VALUE)
+    t0 = time.perf_counter()
+    for k in fnv_scramble(np.arange(n, dtype=np.uint64)):
+        db.put(int(k), val)
+    db.flush()
+    dt = time.perf_counter() - t0
+    return dict(kops=n / dt / 1e3, stalls=db.stats.write_stalls)
+
+
+def _mix(db: LSMStore, n: int, n_ops: int, read_frac: float,
+         insert_frac: float = 0.0, rmw_frac: float = 0.0,
+         scan_frac: float = 0.0, scan_len: int = 100, latest: bool = False,
+         seed: int = 11) -> Dict:
+    zipf = Zipfian(n, seed=seed)
+    rng = np.random.default_rng(seed)
+    idx = zipf.sample(n_ops)
+    if latest:  # read-latest: recency-weighted (YCSB D)
+        idx = n - 1 - idx
+    keys = fnv_scramble(idx.astype(np.uint64))
+    ops = rng.random(n_ops)
+    next_insert = n
+    val = bytes(VALUE)
+    read_lat: List[float] = []
+    scan_lat: List[float] = []
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        u = ops[i]
+        if u < read_frac:
+            t1 = time.perf_counter()
+            db.get(int(keys[i]))
+            read_lat.append((time.perf_counter() - t1) * 1e6)
+        elif u < read_frac + scan_frac:
+            t1 = time.perf_counter()
+            db.scan(int(keys[i]), scan_len)
+            scan_lat.append((time.perf_counter() - t1) * 1e6)
+        elif u < read_frac + scan_frac + rmw_frac:
+            t1 = time.perf_counter()
+            db.get(int(keys[i]))
+            db.put(int(keys[i]), val)
+            read_lat.append((time.perf_counter() - t1) * 1e6)
+        elif u < read_frac + scan_frac + rmw_frac + insert_frac:
+            db.put(int(fnv_scramble(np.asarray([next_insert],
+                                               np.uint64))[0]), val)
+            next_insert += 1
+        else:
+            db.put(int(keys[i]), val)
+    dt = time.perf_counter() - t0
+    lat = read_lat or scan_lat
+    return dict(kops=n_ops / dt / 1e3,
+                avg_us=float(np.mean(lat)) if lat else 0.0,
+                p95_us=pct(lat, 95) if lat else 0.0,
+                p99_us=pct(lat, 99) if lat else 0.0)
+
+
+WORKLOADS = {
+    "A": dict(read_frac=0.5),                                  # 50r/50u
+    "B": dict(read_frac=0.95),                                 # 95r/5u
+    "C": dict(read_frac=1.0),                                  # read only
+    "D": dict(read_frac=0.95, insert_frac=0.05, latest=True),  # read latest
+    "E": dict(read_frac=0.0, scan_frac=0.95, insert_frac=0.05),
+    "F": dict(read_frac=0.5, rmw_frac=0.5),                    # rmw
+}
+
+
+def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
+    rows = []
+    for name, c in (("rocksdb", 1.0), ("autumn(.8)", 0.8),
+                    ("autumn(.4)", 0.4)):
+        db = make_db(c=c, T=5.0, bits_per_key=10, bloom_allocation="monkey")
+        load = _load(db, n)
+        row = dict(system=name, load_kops=load["kops"],
+                   stalls=load["stalls"], levels=db.num_levels_in_use,
+                   space_amp=db.space_amplification())
+        for w, kw in WORKLOADS.items():
+            ops = n_ops if w != "E" else max(n_ops // 8, 500)
+            m = _mix(db, n, ops, **kw)
+            row[f"{w}_kops"] = m["kops"]
+            if w in ("A", "C", "E"):
+                row[f"{w}_avg_us"] = m["avg_us"]
+                row[f"{w}_p95_us"] = m["p95_us"]
+                row[f"{w}_p99_us"] = m["p99_us"]
+        rows.append(row)
+    return rows
+
+
+def main(n: int = 60_000, n_ops: int = 8_000):
+    rows = run(n, n_ops)
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.2f}" if isinstance(r[c], float)
+                       else str(r[c]) for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""End-to-end serving driver (the paper's kind: a read-optimized store
+serving batched requests).
+
+Serves a small qwen3-family model over the AutumnKV prefix cache: three
+request waves with overlapping prompts show cache hits skipping prefill and
+content-addressed pages deduplicating storage.
+
+    PYTHONPATH=src python examples/serve_autumnkv.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models.params import count_params, init_params
+from repro.serve import Request, ServeEngine
+
+cfg = get_smoke("qwen3_4b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+print(f"model: {cfg.name} ({count_params(cfg)/1e6:.2f}M params)")
+
+engine = ServeEngine(cfg, params, batch=4, s_max=96)
+rng = np.random.default_rng(7)
+system_prompt = rng.integers(0, cfg.vocab, 64, dtype=np.int32)  # shared
+other_prompt = rng.integers(0, cfg.vocab, 64, dtype=np.int32)
+
+waves = [
+    ("cold wave (4 misses)", [Request(system_prompt, 8)] * 4),
+    ("warm wave (4 hits) ", [Request(system_prompt, 8)] * 4),
+    ("mixed wave         ", [Request(other_prompt, 8)] * 2 +
+     [Request(system_prompt, 8)] * 2),
+]
+for name, reqs in waves:
+    t0 = time.perf_counter()
+    outs = engine.serve_batch(reqs)
+    dt = time.perf_counter() - t0
+    s = engine.kv.stats()
+    print(f"{name}: {dt*1e3:7.1f} ms | hits={s['hits']:2d} "
+          f"pages_written={s['pages_written']} deduped={s['pages_deduped']} "
+          f"| first tokens: {[int(o[0]) for o in outs]}")
+
+s = engine.kv.stats()
+print(f"\nAutumnKV store: L={s['levels']} levels, "
+      f"bloom probes={s['io']['bloom_probes']}, "
+      f"blocks read={s['io']['blocks_read']}")
+print(f"engine metrics: {engine.metrics}")

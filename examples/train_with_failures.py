@@ -1,0 +1,39 @@
+"""Fault-tolerant training driver: train a smolLM-family model with async
+Autumn checkpoints, kill the "host" mid-run, recover, and finish.
+
+    PYTHONPATH=src python examples/train_with_failures.py
+"""
+from repro.checkpoint import AsyncCheckpointer, CheckpointStore
+from repro.data import DataConfig
+from repro.launch.train import SimulatedHostFailure, Trainer
+from repro.train import OptConfig
+
+from repro.configs import get_smoke
+
+cfg = get_smoke("smollm_135m")
+steps = 60
+store = CheckpointStore()
+trainer = Trainer(
+    cfg,
+    OptConfig(peak_lr=1e-3, warmup_steps=5, total_steps=steps,
+              schedule="wsd"),
+    DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8),
+    store, checkpoint_every=15)
+trainer.init(try_restore=False)
+
+try:
+    trainer.run(steps, inject_failure_at=40)
+except SimulatedHostFailure as e:
+    print(f"!! {e}")
+    trainer.simulate_crash()
+    resumed = trainer.init(try_restore=True)
+    print(f"   restored from Autumn store at step {resumed} "
+          f"(L={store.db.num_levels_in_use}, "
+          f"delta-skipped={store.stats_deltas_skipped} chunks)")
+    trainer.ckpt = AsyncCheckpointer(store)
+    trainer.run(steps)
+
+print(f"\ncheckpoint store: {store.stats_chunks_written} chunks written, "
+      f"{store.stats_deltas_skipped} delta-skipped, "
+      f"WA={store.db.stats.write_amplification():.2f}, "
+      f"L={store.db.num_levels_in_use}")

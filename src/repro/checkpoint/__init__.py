@@ -1,0 +1,1 @@
+from .store import CHUNK_BYTES, AsyncCheckpointer, CheckpointStore

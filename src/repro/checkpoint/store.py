@@ -1,0 +1,199 @@
+"""Autumn delta-checkpoint store (DESIGN.md §2).
+
+Checkpoints are stored in the Autumn LSM engine:
+
+  * every pytree leaf is chunked into CHUNK_BYTES values keyed by a
+    *sequential* uint64 id (insertion-ordered registry), so a full restore is
+    one contiguous **range read** — its cost is O(#runs) = O(sqrt(log N))
+    under Garnering, vs O(log N) under Leveling;
+  * a save only writes chunks whose content hash changed (delta checkpoints:
+    cheap for optimizer state that updates sparsely, e.g. frozen towers,
+    error-feedback buffers, or infrequently-updated embeddings).  Chunk slots
+    are overwritten in place, so the *latest* durable checkpoint is always
+    exactly restorable; older manifests remain valid only for chunks that
+    have not changed since (single-latest retention — the fault-tolerance
+    path only ever needs the newest durable state);
+  * the checkpoint *manifest* (step -> chunk ids + tree metadata) is written
+    last; a crash mid-save can never expose a partial checkpoint because
+    restore goes through the manifest (MVCC: LSM versions are immutable);
+  * restoring a single host's shard is a **point read** per chunk (bloom
+    filters skip runs), the paper's fast-point-read case.
+
+``AsyncCheckpointer`` moves serialization + LSM writes off the training
+thread (overlap with compute), with a bounded queue for back-pressure.
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import queue
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import LSMConfig, LSMStore
+
+Pytree = Any
+
+CHUNK_BYTES = 1 << 16
+_MANIFEST_KEY_BASE = np.uint64(1) << np.uint64(62)  # manifest id space
+
+
+def _leaf_paths(tree: Pytree) -> List[Tuple[str, Any]]:
+    import jax
+    flat = jax.tree.flatten_with_path(tree)[0]
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+class CheckpointStore:
+    def __init__(self, lsm_config: Optional[LSMConfig] = None):
+        self.db = LSMStore(lsm_config or LSMConfig(
+            policy="garnering", T=2.0, c=0.8,
+            memtable_bytes=1 << 20, base_level_bytes=4 << 20,
+            bits_per_key=10, bloom_allocation="monkey"))
+        # path -> first chunk id; ids are insertion-ordered so restores scan
+        self._registry: Dict[str, int] = {}
+        self._chunk_counts: Dict[str, int] = {}
+        self._next_id = 1
+        self._hashes: Dict[int, bytes] = {}   # chunk id -> content hash
+        self.stats_deltas_skipped = 0
+        self.stats_chunks_written = 0
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree: Pytree) -> Dict[str, Any]:
+        import jax
+        entries = []
+        for path, leaf in _leaf_paths(tree):
+            arr = np.asarray(leaf)
+            data = arr.tobytes()
+            n_chunks = max(1, -(-len(data) // CHUNK_BYTES))
+            if path not in self._registry:
+                self._registry[path] = self._next_id
+                self._chunk_counts[path] = n_chunks
+                self._next_id += n_chunks
+            assert self._chunk_counts[path] == n_chunks, \
+                f"{path}: chunk count changed (elastic reshape not per-leaf)"
+            base = self._registry[path]
+            for ci in range(n_chunks):
+                chunk = data[ci * CHUNK_BYTES:(ci + 1) * CHUNK_BYTES]
+                h = hashlib.blake2b(chunk, digest_size=16).digest()
+                cid = base + ci
+                if self._hashes.get(cid) == h:
+                    self.stats_deltas_skipped += 1
+                    continue
+                self._hashes[cid] = h
+                self.db.put(cid, chunk)
+                self.stats_chunks_written += 1
+            entries.append({"path": path, "base": base, "chunks": n_chunks,
+                            "dtype": str(arr.dtype), "shape": list(arr.shape)})
+        manifest = {"step": step, "entries": entries}
+        self.db.put(int(_MANIFEST_KEY_BASE) + step,
+                    json.dumps(manifest).encode())
+        self.db.flush()
+        self.db.wal.fsync(self.db.stats)
+        return manifest
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        res = self.db.scan(int(_MANIFEST_KEY_BASE), count=1 << 20)
+        steps = [k - int(_MANIFEST_KEY_BASE) for k, _ in res]
+        return max(steps) if steps else None
+
+    def restore(self, step: Optional[int] = None) -> Optional[Pytree]:
+        """Full restore = range read over the chunk id space."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                return None
+        raw = self.db.get(int(_MANIFEST_KEY_BASE) + step)
+        if raw is None:
+            return None
+        manifest = json.loads(raw.decode())
+        out: Dict[str, np.ndarray] = {}
+        for e in manifest["entries"]:
+            # contiguous ids => the engine's range-read path (seek + nexts)
+            rows = self.db.scan(e["base"], count=e["chunks"])
+            data = b"".join(v for _, v in rows[:e["chunks"]])
+            arr = np.frombuffer(data, dtype=np.dtype(e["dtype"]))
+            out[e["path"]] = arr.reshape(e["shape"]).copy()
+        return out
+
+    def restore_leaf(self, step: int, path: str) -> Optional[np.ndarray]:
+        """Single-shard recovery = bloom-filtered point reads."""
+        raw = self.db.get(int(_MANIFEST_KEY_BASE) + step)
+        if raw is None:
+            return None
+        manifest = json.loads(raw.decode())
+        for e in manifest["entries"]:
+            if e["path"] == path:
+                chunks = [self.db.get(e["base"] + i) for i in range(e["chunks"])]
+                if any(c is None for c in chunks):
+                    return None
+                arr = np.frombuffer(b"".join(chunks), np.dtype(e["dtype"]))
+                return arr.reshape(e["shape"]).copy()
+        return None
+
+    # ------------------------------------------------------------- recovery
+    def crash(self):
+        self.db.crash()
+        self.db.recover()
+        # in-memory delta hashes die with the process: rebuild conservatively
+        self._hashes.clear()
+
+    def restore_tree(self, step: Optional[int], like: Pytree,
+                     shardings: Optional[Pytree] = None) -> Optional[Pytree]:
+        """Rebuild a pytree (optionally placing leaves with NamedShardings —
+        elastic rescale: the target mesh may differ from the writer's)."""
+        import jax
+        flat_restored = self.restore(step)
+        if flat_restored is None:
+            return None
+        leaves = []
+        flat = jax.tree.flatten_with_path(like)
+        shard_leaves = (jax.tree.leaves(
+            shardings, is_leaf=lambda s: hasattr(s, "spec"))
+            if shardings is not None else [None] * len(flat[0]))
+        for (path, leaf), sh in zip(flat[0], shard_leaves):
+            key = jax.tree_util.keystr(path)
+            arr = flat_restored[key].astype(leaf.dtype)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            leaves.append(arr)
+        return jax.tree.unflatten(flat[1], leaves)
+
+
+class AsyncCheckpointer:
+    """Background writer thread: serialize + LSM-write off the train loop."""
+
+    def __init__(self, store: CheckpointStore, max_pending: int = 2):
+        self.store = store
+        self._q: "queue.Queue" = queue.Queue(maxsize=max_pending)
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, tree = item
+            try:
+                self.store.save(step, tree)
+            except BaseException as e:  # surfaced on next submit/close
+                self._err = e
+
+    def submit(self, step: int, tree: Pytree):
+        if self._err:
+            raise self._err
+        import jax
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before enqueue
+        self._q.put((step, host_tree))
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join()
+        if self._err:
+            raise self._err

@@ -1,0 +1,71 @@
+"""Assigned architecture registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+Each <arch>.py defines CONFIG (the exact assigned full-size configuration) and
+SMOKE (a reduced same-family config for CPU tests).  Shape sets (the 4 assigned
+input shapes) live here; applicability rules follow the assignment spec:
+``long_500k`` runs only for sub-quadratic stacks (mamba2, recurrentgemma,
+gemma3) — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.config import ModelConfig
+
+ARCH_IDS = [
+    "whisper_medium",
+    "mamba2_130m",
+    "minicpm_2b",
+    "smollm_135m",
+    "qwen3_4b",
+    "gemma3_1b",
+    "granite_moe_1b_a400m",
+    "mixtral_8x22b",
+    "recurrentgemma_2b",
+    "llama32_vision_90b",
+]
+
+# Accept dashes too (CLI convenience).
+def _canon(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_canon(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_canon(arch)}")
+    return mod.SMOKE
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Assignment-spec applicability for an (arch, shape) cell."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skipped: pure full-attention arch; long_500k requires "
+                       "sub-quadratic attention (DESIGN.md §6)")
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    """Every (arch, shape) cell in the assignment — 40 total."""
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]

@@ -1,0 +1,28 @@
+"""Autumn LSM core: the paper's contribution (Garnering merge policy) plus the
+baseline policies it is compared against, in a block-I/O-accounted engine.
+
+Public API:
+    LSMStore, LSMConfig           — the storage engine
+    make_policy, Garnering, ...   — merge policies (paper §2.3/§3.1)
+    BloomFilter, allocate_fprs    — Monkey/Autumn filter allocation (Eq. 7-10)
+    IOStats                       — block-I/O cost accounting
+"""
+from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
+                    garnering_theoretical_fprs, theoretical_fpr,
+                    zero_result_read_cost)
+from .engine import LSMConfig, LSMStore
+from .manifest import Manifest, RunStorage, Version
+from .memtable import Memtable, WriteAheadLog
+from .policy import (POLICIES, CompactionTask, Garnering, LazyLeveling,
+                     Leveling, MergePolicy, QLSMBush, Tiering, make_policy)
+from .run import SortedRun, build_run, merge_runs
+from .types import BLOCK_SIZE, KEY_BYTES, IOStats
+
+__all__ = [
+    "LSMStore", "LSMConfig", "IOStats", "BloomFilter", "allocate_fprs",
+    "bits_for_fpr", "theoretical_fpr", "garnering_theoretical_fprs",
+    "zero_result_read_cost", "Manifest", "RunStorage", "Version", "Memtable",
+    "WriteAheadLog", "POLICIES", "CompactionTask", "Garnering", "LazyLeveling",
+    "Leveling", "MergePolicy", "QLSMBush", "Tiering", "make_policy",
+    "SortedRun", "build_run", "merge_runs", "BLOCK_SIZE", "KEY_BYTES",
+]

@@ -1,0 +1,146 @@
+"""Bloom filters + the Monkey/Autumn optimal FPR allocation (paper Eq. 2, 7-10).
+
+``BloomFilter`` is a vectorized double-hashing bloom filter over uint64 keys.
+``allocate_fprs`` solves the Monkey optimization adapted to Garnering: minimize
+the zero-result point-read cost R = sum_i p_i subject to the total filter
+memory budget (Eq. 8).  The Lagrangian solution is p_i proportional to N_i
+(capped at 1), which for Garnering capacities reproduces Eq. 9:
+p_{L-i} = p_L * c^{i(i-1)/2} / T^i.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .types import splitmix64
+
+LN2 = math.log(2.0)
+LN2_SQ = LN2 * LN2
+
+
+class BloomFilter:
+    """Standard bloom filter with k = round(bits_per_key * ln2) double hashes."""
+
+    __slots__ = ("m_bits", "k", "bits", "n_keys")
+
+    def __init__(self, keys: np.ndarray, bits_per_key: float):
+        n = int(keys.size)
+        self.n_keys = n
+        if n == 0 or bits_per_key <= 0:
+            # Degenerate filter: answers "maybe" for everything (FPR = 1).
+            self.m_bits = 0
+            self.k = 0
+            self.bits = np.zeros(0, dtype=np.uint64)
+            return
+        m = max(64, int(round(bits_per_key * n)))
+        self.m_bits = m
+        self.k = max(1, int(round(bits_per_key * LN2)))
+        self.bits = np.zeros((m + 63) // 64, dtype=np.uint64)
+        h1, h2 = self._hashes(np.asarray(keys, dtype=np.uint64))
+        for i in range(self.k):
+            pos = (h1 + np.uint64(i) * h2) % np.uint64(m)
+            np.bitwise_or.at(self.bits, (pos >> np.uint64(6)).astype(np.int64),
+                             np.uint64(1) << (pos & np.uint64(63)))
+
+    @staticmethod
+    def _hashes(keys: np.ndarray):
+        h1 = splitmix64(keys)
+        h2 = splitmix64(h1) | np.uint64(1)  # odd => full-period double hashing
+        return h1, h2
+
+    def may_contain(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized membership test. True = maybe present, False = absent."""
+        keys = np.asarray(keys, dtype=np.uint64)
+        if self.m_bits == 0:
+            return np.ones(keys.shape, dtype=bool)
+        h1, h2 = self._hashes(keys)
+        out = np.ones(keys.shape, dtype=bool)
+        m = np.uint64(self.m_bits)
+        for i in range(self.k):
+            pos = (h1 + np.uint64(i) * h2) % m
+            word = self.bits[(pos >> np.uint64(6)).astype(np.int64)]
+            out &= (word >> (pos & np.uint64(63))) & np.uint64(1) != 0
+        return out
+
+    @property
+    def memory_bits(self) -> int:
+        return self.m_bits
+
+    def expected_fpr(self) -> float:
+        if self.m_bits == 0:
+            return 1.0
+        return theoretical_fpr(self.m_bits / max(self.n_keys, 1))
+
+
+def theoretical_fpr(bits_per_key: float) -> float:
+    """Eq. 2: FPR = e^{-ln(2)^2 * M/N}."""
+    if bits_per_key <= 0:
+        return 1.0
+    return math.exp(-LN2_SQ * bits_per_key)
+
+
+def bits_for_fpr(p: float) -> float:
+    """Invert Eq. 2: bits/key needed for target FPR p (p in (0, 1])."""
+    if p >= 1.0:
+        return 0.0
+    return -math.log(p) / LN2_SQ
+
+
+def allocate_fprs(level_sizes: Sequence[int], total_bits: float) -> np.ndarray:
+    """Monkey/Autumn water-filling (Eq. 7-10 generalized to measured N_i).
+
+    Minimize sum_i p_i  s.t.  sum_i (-N_i ln p_i / ln2^2) = total_bits,
+    0 < p_i <= 1.  KKT => p_i = lam * N_i on the interior, p_i = 1 where the
+    budget runs out (largest levels saturate first, exactly as the paper sets
+    p_L = 1 in the "Filter Memory Budget" analysis).
+    Returns the optimal per-level FPRs.
+    """
+    sizes = np.asarray([max(int(s), 0) for s in level_sizes], dtype=np.float64)
+    L = sizes.size
+    fprs = np.ones(L)
+    if total_bits <= 0 or L == 0:
+        return fprs
+    active = sizes > 0
+    # Saturate levels (p_i = 1) from the largest down until the remaining
+    # budget supports an interior solution with p_i <= 1 for all active i.
+    order = np.argsort(-sizes)  # largest first
+    saturated = np.zeros(L, dtype=bool)
+    for cut in range(L + 1):
+        interior = active & ~saturated
+        if not interior.any():
+            break
+        n_int = sizes[interior]
+        # Interior solution: p_i = lam*N_i; budget constraint gives
+        # sum(-N_i ln(lam N_i)) / ln2^2 = total_bits  =>  solve for ln lam.
+        s = n_int.sum()
+        ln_lam = -(total_bits * LN2_SQ + (n_int * np.log(n_int)).sum()) / s
+        p = np.exp(ln_lam) * n_int
+        if (p <= 1.0 + 1e-12).all():
+            fprs[interior] = np.minimum(p, 1.0)
+            return fprs
+        # Saturate the largest not-yet-saturated level and retry.
+        for idx in order:
+            if active[idx] and not saturated[idx]:
+                saturated[idx] = True
+                break
+    return fprs
+
+
+def fprs_to_bits_per_key(fprs: Sequence[float]) -> np.ndarray:
+    return np.asarray([bits_for_fpr(p) for p in fprs])
+
+
+def garnering_theoretical_fprs(L: int, T: float, c: float, p_last: float = 1.0
+                               ) -> np.ndarray:
+    """Closed-form Eq. 9: p_{L-i} = p_L * c^{i(i-1)/2} / T^i (1-indexed levels)."""
+    out = np.empty(L)
+    for i in range(L):  # i = distance from last level
+        out[L - 1 - i] = p_last * (c ** (i * (i - 1) / 2)) / (T ** i)
+    return np.minimum(out, 1.0)
+
+
+def zero_result_read_cost(fprs: Sequence[float]) -> float:
+    """Eq. 7: expected blocks read by a point query for an absent key."""
+    return float(np.sum(fprs))

@@ -1,0 +1,353 @@
+"""The Autumn LSM storage engine.
+
+Composes memtable + WAL, immutable sorted runs, a pluggable merge policy
+(Garnering by default), MVCC manifest, Monkey/Autumn bloom allocation, and a
+RocksDB-style L0 rate limiter.  All reads/writes are accounted in the block
+I/O cost model (types.IOStats) so the paper's Table 2 complexities can be
+validated empirically.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bloom import allocate_fprs, bits_for_fpr
+from .manifest import Manifest, RunStorage, Version
+from .memtable import Memtable, WriteAheadLog
+from .policy import CompactionTask, MergePolicy, make_policy
+from .run import SortedRun, build_run, merge_runs
+from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
+                    TOMBSTONE_LEN, IOStats)
+
+
+@dataclasses.dataclass
+class LSMConfig:
+    policy: str = "garnering"
+    T: float = 2.0
+    c: float = 0.8                      # Garnering scaling factor (c=1 => Leveling)
+    memtable_bytes: int = 1 << 20       # 1 MiB write buffer
+    base_level_bytes: int = 10 << 20    # max_bytes_for_level_base (OptimizeForSmallDb)
+    l0_compaction_trigger: int = 4
+    l0_stop_writes_trigger: int = 12    # rate limiter (level0_stop_writes_trigger)
+    bits_per_key: float = 0.0           # 0 => no bloom filters
+    bloom_allocation: str = "uniform"   # "uniform" | "monkey"
+    wal_fsync_every_write: bool = False # False => fsync at flush (db default)
+    block_size: int = BLOCK_SIZE
+    key_bytes: int = KEY_BYTES
+
+
+class LSMStore:
+    def __init__(self, config: Optional[LSMConfig] = None):
+        self.config = config or LSMConfig()
+        self.policy: MergePolicy = make_policy(
+            self.config.policy, T=self.config.T, c=self.config.c,
+            l0_trigger=self.config.l0_compaction_trigger)
+        self.stats = IOStats()
+        self.storage = RunStorage()
+        self.manifest = Manifest(self.storage)
+        self.memtable = Memtable(self.config.memtable_bytes, self.config.key_bytes)
+        self.wal = WriteAheadLog()
+        self._levels: List[List[SortedRun]] = [[]]
+        self._max_level = 1
+        self._seq = 0
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: int, value: bytes):
+        self._write(key, value)
+
+    def delete(self, key: int):
+        self._write(key, None)
+
+    def _write(self, key: int, value: Optional[bytes]):
+        self._seq += 1
+        self.wal.append(1 if value is None else 0, key, self._seq,
+                        value or b"", self.stats)
+        if self.config.wal_fsync_every_write:
+            self.wal.fsync(self.stats)
+        self.memtable.put(int(key), self._seq, value)
+        if self.memtable.is_full():
+            self.flush()
+
+    def flush(self):
+        """Freeze the memtable into an L0 run (no merge — §3.2 L0 tiering)."""
+        if len(self.memtable) == 0:
+            return
+        # Rate limiter: too many L0 runs => write stall until compaction.
+        if len(self._levels[0]) >= self.config.l0_stop_writes_trigger:
+            self.stats.write_stalls += 1
+            self._compact_until_quiet()
+        self.wal.fsync(self.stats)
+        run = self.memtable.to_run(self._bits_for_level(0), self.stats)
+        self.memtable.clear()
+        self.wal.truncate()
+        if len(run):
+            self._levels[0].append(run)  # newest last
+            self._commit()
+        self._compact_until_quiet()
+
+    # -------------------------------------------------------- compactions
+    def _compact_until_quiet(self):
+        sizes = [[r.data_bytes for r in lvl] for lvl in self._levels]
+        while True:
+            new_L, task, delayed = self.policy.plan(
+                sizes, self._max_level, self.config.base_level_bytes)
+            if delayed:
+                self.stats.delayed_last_level_compactions += delayed
+            self._max_level = max(self._max_level, new_L)
+            if task is None:
+                return
+            self._apply(task)
+            sizes = [[r.data_bytes for r in lvl] for lvl in self._levels]
+
+    def _apply(self, task: CompactionTask):
+        while len(self._levels) <= task.dst_level:
+            self._levels.append([])
+        srcs = self._levels[task.src_level]
+        dsts = self._levels[task.dst_level] if task.include_dst else []
+        deepest = self._deepest_nonempty()
+        drop_tombs = task.include_dst and task.dst_level >= deepest
+        merged = merge_runs(srcs + dsts, self._bits_for_level(task.dst_level),
+                            self.stats, drop_tombstones=drop_tombs)
+        self._levels[task.src_level] = []
+        if task.include_dst:
+            self._levels[task.dst_level] = [merged] if len(merged) else []
+        elif len(merged):
+            self._levels[task.dst_level].append(merged)
+        self._max_level = max(self._max_level, task.dst_level)
+        self._commit()
+
+    def _deepest_nonempty(self) -> int:
+        deepest = 1
+        for i in range(len(self._levels) - 1, 0, -1):
+            if self._levels[i]:
+                deepest = i
+                break
+        return deepest
+
+    def _commit(self):
+        self.manifest.commit(self._levels, self._max_level, self._seq, self.stats)
+        self.manifest.fsync(self.stats)
+        self.manifest.gc()
+
+    # -------------------------------------------------------------- bloom
+    def _bits_for_level(self, level: int) -> float:
+        cfg = self.config
+        if cfg.bits_per_key <= 0:
+            return 0.0
+        if cfg.bloom_allocation == "uniform":
+            return cfg.bits_per_key
+        # Monkey/Autumn allocation (Eq. 8-10): optimal FPR per level given the
+        # total budget of bits_per_key * total_entries.
+        counts = [sum(len(r) for r in lvl) for lvl in self._levels]
+        while len(counts) <= level:
+            counts.append(0)
+        total = sum(counts)
+        if total == 0:
+            return cfg.bits_per_key
+        # The level being (re)built will hold roughly the entries being merged
+        # into it; use current counts as the Monkey size profile.
+        fprs = allocate_fprs(counts, cfg.bits_per_key * total)
+        return bits_for_fpr(float(fprs[level])) if counts[level] > 0 else cfg.bits_per_key
+
+    # -------------------------------------------------------------- reads
+    def _read_state(self, snapshot: Optional[Version] = None
+                    ) -> List[List[SortedRun]]:
+        if snapshot is None:
+            return self._levels
+        return snapshot.runs(self.storage)
+
+    def _runs_newest_first(self, levels: List[List[SortedRun]]):
+        for r in reversed(levels[0]):
+            yield r
+        for lvl in levels[1:]:
+            for r in reversed(lvl):
+                yield r
+
+    def get(self, key: int, snapshot: Optional[Version] = None) -> Optional[bytes]:
+        self.stats.point_reads += 1
+        if snapshot is None:
+            hit = self.memtable.get(int(key))
+            if hit is not None:
+                return hit[1]
+        use_bloom = self.config.bits_per_key > 0
+        for run in self._runs_newest_first(self._read_state(snapshot)):
+            if len(run) == 0:
+                continue
+            self.stats.runs_touched_point += 1
+            found, value, _ = run.point_get(int(key), self.stats, use_bloom)
+            if found:
+                return value
+        return None
+
+    def seek(self, key: int, snapshot: Optional[Version] = None) -> Optional[int]:
+        """Position a merging iterator at the first key >= key (db_bench Seek).
+
+        Cost: one seek + one block read per run with a valid position."""
+        self.stats.range_reads += 1
+        best: Optional[int] = None
+        for run in self._runs_newest_first(self._read_state(snapshot)):
+            if len(run) == 0:
+                continue
+            self.stats.runs_touched_range += 1
+            self.stats.seeks += 1
+            i = run.seek_idx(int(key))
+            if i < len(run):
+                self.stats.blocks_read += 1
+                k = int(run.keys[i])
+                if best is None or k < best:
+                    best = k
+        if snapshot is None:
+            for k, s, v in self.memtable.scan(int(key))[:1]:
+                if v is not None and (best is None or k < best):
+                    best = k
+        return best
+
+    def scan(self, start_key: int, count: int,
+             snapshot: Optional[Version] = None) -> List[Tuple[int, bytes]]:
+        """Range read: first ``count`` live entries with key >= start_key.
+
+        Implements a merging iterator over all runs + memtable; I/O accounting
+        charges each run one seek block plus the blocks spanned by the entries
+        the merged iterator actually consumed from that run.
+        """
+        self.stats.range_reads += 1
+        levels = self._read_state(snapshot)
+        runs = [r for r in self._runs_newest_first(levels) if len(r)]
+        per_run_take = max(count, 1)
+        while True:
+            cand_k: List[np.ndarray] = []
+            cand_s: List[np.ndarray] = []
+            cand_v: List[List[Optional[bytes]]] = []
+            # Results are only valid up to the smallest last-key among
+            # truncated run slices (a run whose window ended may still hold
+            # keys below another run's contributions).
+            frontier: Optional[int] = None
+            seek_positions = []
+            for run in runs:
+                i = run.seek_idx(int(start_key))
+                seek_positions.append(i)
+                k, s, l, v = run.slice_from(i, per_run_take)
+                if i + per_run_take < len(run) and len(k):
+                    fk = int(k[-1])
+                    frontier = fk if frontier is None else min(frontier, fk)
+                cand_k.append(k)
+                cand_s.append(s)
+                cand_v.append([None if l[j] == TOMBSTONE_LEN else bytes(v[j, :l[j]])
+                               for j in range(len(k))])
+            mem_items = (self.memtable.scan(int(start_key))
+                         if snapshot is None else [])
+            merged = self._merge_candidates(cand_k, cand_s, cand_v, mem_items)
+            live = [(k, v) for k, v in merged if v is not None and
+                    (frontier is None or k <= frontier)][:count]
+            if len(live) >= count or frontier is None:
+                # Account I/O for the final pass only (the retry loop models
+                # an iterator that would have kept reading anyway).
+                end_key = live[-1][0] if live else None
+                for run, i in zip(runs, seek_positions):
+                    self.stats.runs_touched_range += 1
+                    self.stats.seeks += 1
+                    if i >= len(run):
+                        continue
+                    if end_key is None:
+                        consumed_end = i + 1
+                    else:
+                        consumed_end = int(np.searchsorted(
+                            run.keys, np.uint64(end_key), side="right"))
+                        consumed_end = max(consumed_end, i + 1)
+                    self.stats.blocks_read += run.blocks_spanned(i, consumed_end)
+                return live
+            per_run_take *= 4
+
+    @staticmethod
+    def _merge_candidates(cand_k, cand_s, cand_v, mem_items):
+        ks: List[int] = []
+        ss: List[int] = []
+        vs: List[Optional[bytes]] = []
+        for k_arr, s_arr, v_list in zip(cand_k, cand_s, cand_v):
+            ks.extend(int(x) for x in k_arr)
+            ss.extend(int(x) for x in s_arr)
+            vs.extend(v_list)
+        for k, s, v in mem_items:
+            ks.append(k)
+            ss.append(s)
+            vs.append(v)
+        order = sorted(range(len(ks)), key=lambda i: (ks[i], -ss[i]))
+        out: List[Tuple[int, Optional[bytes]]] = []
+        last_key = None
+        for i in order:
+            if ks[i] != last_key:
+                out.append((ks[i], vs[i]))
+                last_key = ks[i]
+        return out
+
+    # ----------------------------------------------------------- snapshots
+    def get_snapshot(self) -> Version:
+        return self.manifest.current()
+
+    # ------------------------------------------------------------ recovery
+    def crash(self):
+        """Simulate process crash: volatile state is lost."""
+        self.wal.crash()
+        self.manifest.crash()
+        self.memtable.clear()
+
+    def recover(self):
+        """Rebuild volatile state from the durable manifest + WAL."""
+        v = self.manifest.current()
+        self._levels = v.runs(self.storage)
+        self._max_level = v.max_level
+        self._seq = v.last_seq
+        self.memtable.clear()
+        for op, key, seq, value in self.wal.records():
+            self._seq = max(self._seq, seq)
+            self.memtable.put(key, seq, None if op == 1 else value)
+
+    # ---------------------------------------------------------------- info
+    def level_summary(self) -> List[dict]:
+        out = []
+        for i, lvl in enumerate(self._levels):
+            cap = (self.policy.capacity(i, self._max_level,
+                                        self.config.base_level_bytes)
+                   if i >= 1 else None)
+            out.append(dict(level=i, runs=len(lvl),
+                            entries=sum(len(r) for r in lvl),
+                            bytes=sum(r.data_bytes for r in lvl),
+                            capacity=cap))
+        return out
+
+    @property
+    def num_levels_in_use(self) -> int:
+        return self._max_level
+
+    @property
+    def total_entries(self) -> int:
+        return sum(len(r) for lvl in self._levels for r in lvl) + len(self.memtable)
+
+    def total_live_entries(self) -> int:
+        """Logical entry count (newest versions only, tombstones excluded)."""
+        seen: set = set()
+        live = 0
+        for k, (s, v) in self.memtable._data.items():
+            seen.add(k)
+            if v is not None:
+                live += 1
+        for run in self._runs_newest_first(self._levels):
+            mask = ~np.isin(run.keys, np.fromiter(seen, dtype=KEY_DTYPE, count=len(seen))) \
+                if seen else np.ones(len(run), bool)
+            newk = run.keys[mask]
+            live += int(np.count_nonzero(run.vlens[mask] != TOMBSTONE_LEN))
+            seen.update(int(x) for x in newk)
+        return live
+
+    def space_amplification(self) -> float:
+        phys = sum(r.data_bytes for lvl in self._levels for r in lvl)
+        live = self.total_live_entries()
+        if live == 0:
+            return 1.0
+        # logical bytes: approximate with average entry size of physical data
+        total = sum(len(r) for lvl in self._levels for r in lvl)
+        if total == 0:
+            return 1.0
+        return phys / (phys * live / total)

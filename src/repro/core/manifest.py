@@ -1,0 +1,92 @@
+"""MVCC manifest: immutable versions of the tree + a metadata log (§2.1).
+
+Readers pin a :class:`Version`; flushes/compactions install a new version
+atomically.  The metadata log mirrors RocksDB's MANIFEST: an append-only
+record of version edits with an fsync watermark, so crash recovery restores
+the last durable version and never observes a half-applied compaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .run import SortedRun
+from .types import IOStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Version:
+    version_id: int
+    levels: Tuple[Tuple[int, ...], ...]  # run ids per level
+    max_level: int
+    last_seq: int
+
+    def runs(self, storage: "RunStorage") -> List[List[SortedRun]]:
+        return [[storage.get(rid) for rid in lvl] for lvl in self.levels]
+
+
+class RunStorage:
+    """Owns immutable runs by id; refcounted by manifest versions."""
+
+    def __init__(self):
+        self._runs: Dict[int, SortedRun] = {}
+
+    def add(self, run: SortedRun) -> int:
+        self._runs[run.run_id] = run
+        return run.run_id
+
+    def get(self, run_id: int) -> SortedRun:
+        return self._runs[run_id]
+
+    def gc(self, live_ids: Sequence[int]):
+        live = set(live_ids)
+        for rid in [r for r in self._runs if r not in live]:
+            del self._runs[rid]
+
+    def __len__(self):
+        return len(self._runs)
+
+
+class Manifest:
+    def __init__(self, storage: RunStorage):
+        self.storage = storage
+        self._log: List[Version] = []
+        self._synced_upto = 0  # number of durable versions
+        self._next_id = 0
+        self.commit(levels=[[]], max_level=1, last_seq=0, stats=IOStats())
+        self.fsync(IOStats())
+
+    # ------------------------------------------------------------- writes
+    def commit(self, levels: Sequence[Sequence[SortedRun]], max_level: int,
+               last_seq: int, stats: IOStats) -> Version:
+        lv = tuple(tuple(self.storage.add(r) for r in lvl) for lvl in levels)
+        v = Version(self._next_id, lv, max_level, last_seq)
+        self._next_id += 1
+        self._log.append(v)
+        return v
+
+    def fsync(self, stats: IOStats):
+        self._synced_upto = len(self._log)
+        stats.wal_fsyncs += 1
+        # Old versions with no readers can be GC'd; keep the durable tail.
+        if len(self._log) > 8:
+            self._log = self._log[-8:]
+            self._synced_upto = len(self._log)
+
+    # -------------------------------------------------------------- reads
+    def current(self) -> Version:
+        return self._log[-1]
+
+    def crash(self):
+        """Lose versions past the fsync watermark (simulated crash)."""
+        self._log = self._log[: max(self._synced_upto, 1)]
+
+    def live_run_ids(self) -> List[int]:
+        ids: List[int] = []
+        for v in self._log:
+            for lvl in v.levels:
+                ids.extend(lvl)
+        return ids
+
+    def gc(self):
+        self.storage.gc(self.live_run_ids())

@@ -1,0 +1,122 @@
+"""Memtable + write-ahead log.
+
+The memtable buffers updates in insertion order keyed by uint64 user key
+(newest write to a key wins, as in a skiplist memtable).  The WAL is an
+append-only in-memory byte log with an explicit fsync barrier counter so
+durability/recovery logic is real and testable without a filesystem
+(DESIGN.md §8.2).
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .run import SortedRun, build_run
+from .types import KEY_BYTES, KEY_DTYPE, SEQ_DTYPE, TOMBSTONE_LEN, IOStats
+
+_PUT, _DEL = 0, 1
+_HDR = struct.Struct("<BQQI")  # op, key, seq, vlen
+
+
+class WriteAheadLog:
+    """Append-only log; ``records()`` replays committed entries on recovery."""
+
+    def __init__(self):
+        self._buf = bytearray()
+        self._synced_upto = 0
+
+    def append(self, op: int, key: int, seq: int, value: bytes, stats: IOStats):
+        self._buf += _HDR.pack(op, key, seq, len(value))
+        self._buf += value
+        stats.wal_appends += 1
+
+    def fsync(self, stats: IOStats):
+        self._synced_upto = len(self._buf)
+        stats.wal_fsyncs += 1
+
+    def truncate(self):
+        """Called after a successful flush: the flushed prefix is durable."""
+        self._buf = bytearray()
+        self._synced_upto = 0
+
+    def crash(self):
+        """Simulate a crash: unsynced suffix is lost."""
+        self._buf = self._buf[: self._synced_upto]
+
+    def records(self) -> Iterator[Tuple[int, int, int, bytes]]:
+        off, buf = 0, bytes(self._buf)
+        while off + _HDR.size <= len(buf):
+            op, key, seq, vlen = _HDR.unpack_from(buf, off)
+            off += _HDR.size
+            if off + vlen > len(buf):
+                break  # torn tail write
+            yield op, key, seq, buf[off:off + vlen]
+            off += vlen
+
+    def __len__(self):
+        return len(self._buf)
+
+
+class Memtable:
+    """Insertion buffer. Size accounting matches the run entry-size model."""
+
+    def __init__(self, capacity_bytes: int, key_bytes: int = KEY_BYTES):
+        self.capacity_bytes = capacity_bytes
+        self.key_bytes = key_bytes
+        self._data: Dict[int, Tuple[int, Optional[bytes]]] = {}
+        self._bytes = 0
+
+    def put(self, key: int, seq: int, value: Optional[bytes]):
+        """value=None is a tombstone."""
+        prev = self._data.get(key)
+        if prev is not None:
+            self._bytes -= self.key_bytes + (len(prev[1]) if prev[1] is not None else 0)
+        self._data[key] = (seq, value)
+        self._bytes += self.key_bytes + (len(value) if value is not None else 0)
+
+    def get(self, key: int) -> Optional[Tuple[int, Optional[bytes]]]:
+        return self._data.get(key)
+
+    def scan(self, start_key: int) -> List[Tuple[int, int, Optional[bytes]]]:
+        items = [(k, s, v) for k, (s, v) in self._data.items() if k >= start_key]
+        items.sort()
+        return items
+
+    @property
+    def size_bytes(self) -> int:
+        return self._bytes
+
+    def __len__(self):
+        return len(self._data)
+
+    def is_full(self) -> bool:
+        return self._bytes >= self.capacity_bytes
+
+    def to_run(self, bits_per_key: float, stats: IOStats) -> SortedRun:
+        n = len(self._data)
+        keys = np.fromiter(self._data.keys(), dtype=KEY_DTYPE, count=n)
+        seqs = np.empty(n, dtype=SEQ_DTYPE)
+        vmax = 0
+        for i, (s, v) in enumerate(self._data.values()):
+            seqs[i] = s
+            if v is not None and len(v) > vmax:
+                vmax = len(v)
+        vlens = np.empty(n, dtype=np.int32)
+        vals = np.zeros((n, vmax), dtype=np.uint8)
+        for i, (s, v) in enumerate(self._data.values()):
+            if v is None:
+                vlens[i] = TOMBSTONE_LEN
+            else:
+                vlens[i] = len(v)
+                vals[i, :len(v)] = np.frombuffer(v, dtype=np.uint8)
+        run = build_run(keys, seqs, vlens, vals, bits_per_key=bits_per_key)
+        stats.entries_flushed += len(run)
+        stats.bytes_flushed += run.data_bytes
+        stats.blocks_written += run.n_blocks
+        return run
+
+    def clear(self):
+        self._data.clear()
+        self._bytes = 0

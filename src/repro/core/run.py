@@ -1,0 +1,168 @@
+"""Immutable sorted runs (the engine's SST analog).
+
+A run stores its entries as parallel numpy arrays sorted by key:
+  keys  : uint64 (strictly increasing — duplicates are resolved at build time,
+          newest sequence number wins, matching LSM merge semantics)
+  seqs  : uint64 sequence numbers (MVCC ordering across runs)
+  vlens : int32 value lengths; TOMBSTONE_LEN marks a delete marker
+  vals  : uint8 (n, Vmax) padded value payload
+
+Entries are packed into BLOCK_SIZE blocks; ``block_of`` maps each entry to its
+block id and the *fence pointers* (first key per block, kept in host memory —
+"main memory" in the paper) let a reader locate the single candidate block of
+any key with zero block touches, exactly the paper's fence-pointer model.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bloom import BloomFilter
+from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
+                    TOMBSTONE_LEN, IOStats)
+
+_run_ids = itertools.count()
+
+
+class SortedRun:
+    __slots__ = ("run_id", "keys", "seqs", "vlens", "vals", "block_of",
+                 "fence_keys", "n_blocks", "data_bytes", "bloom", "level_hint")
+
+    def __init__(self, keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
+                 vals: np.ndarray, bits_per_key: float = 0.0,
+                 block_size: int = BLOCK_SIZE, key_bytes: int = KEY_BYTES):
+        assert keys.ndim == 1
+        self.run_id = next(_run_ids)
+        self.keys = np.ascontiguousarray(keys, dtype=KEY_DTYPE)
+        self.seqs = np.ascontiguousarray(seqs, dtype=SEQ_DTYPE)
+        self.vlens = np.ascontiguousarray(vlens, dtype=np.int32)
+        self.vals = np.ascontiguousarray(vals, dtype=np.uint8)
+        n = self.keys.size
+        entry_sizes = key_bytes + np.maximum(self.vlens, 0).astype(np.int64)
+        cum = np.cumsum(entry_sizes)
+        self.data_bytes = int(cum[-1]) if n else 0
+        # Entry i lives in the block containing its *starting* byte.
+        starts = cum - entry_sizes
+        self.block_of = (starts // block_size).astype(np.int64)
+        self.n_blocks = int(self.block_of[-1]) + 1 if n else 0
+        # Fence pointer = first key of each block (in-memory index).
+        if n:
+            first_idx = np.searchsorted(self.block_of,
+                                        np.arange(self.n_blocks), side="left")
+            self.fence_keys = self.keys[first_idx]
+        else:
+            self.fence_keys = np.zeros(0, dtype=KEY_DTYPE)
+        self.bloom = BloomFilter(self.keys, bits_per_key)
+        self.level_hint = -1  # set by the manifest; informational
+
+    # ------------------------------------------------------------------ size
+    def __len__(self) -> int:
+        return int(self.keys.size)
+
+    @property
+    def min_key(self) -> int:
+        return int(self.keys[0]) if len(self) else 0
+
+    @property
+    def max_key(self) -> int:
+        return int(self.keys[-1]) if len(self) else 0
+
+    # ----------------------------------------------------------------- reads
+    def point_get(self, key: int, stats: IOStats,
+                  use_bloom: bool = True) -> Tuple[bool, Optional[bytes], int]:
+        """Returns (found, value_or_None_if_tombstone, seq).
+
+        Cost model: one bloom probe (CPU), then one block read iff the bloom
+        says maybe (fence pointers locate the block for free).
+        """
+        k = np.uint64(key)
+        if use_bloom and self.bloom.k > 0:
+            stats.bloom_probes += 1
+            if not bool(self.bloom.may_contain(np.asarray([k]))[0]):
+                stats.bloom_negatives += 1
+                return False, None, -1
+        stats.blocks_read += 1  # fence pointers give the unique candidate block
+        i = int(np.searchsorted(self.keys, k))
+        if i < len(self) and self.keys[i] == k:
+            vlen = int(self.vlens[i])
+            if vlen == TOMBSTONE_LEN:
+                return True, None, int(self.seqs[i])
+            return True, bytes(self.vals[i, :vlen]), int(self.seqs[i])
+        stats.false_positives += 1
+        return False, None, -1
+
+    def seek_idx(self, key: int) -> int:
+        return int(np.searchsorted(self.keys, np.uint64(key), side="left"))
+
+    def slice_from(self, start_idx: int, count: int):
+        """Entries [start_idx, start_idx+count) as (keys, seqs, vlens, vals)."""
+        e = min(start_idx + count, len(self))
+        return (self.keys[start_idx:e], self.seqs[start_idx:e],
+                self.vlens[start_idx:e], self.vals[start_idx:e])
+
+    def blocks_spanned(self, start_idx: int, end_idx: int) -> int:
+        """Number of blocks touched to read entries [start_idx, end_idx)."""
+        if end_idx <= start_idx or start_idx >= len(self):
+            return 0
+        end_idx = min(end_idx, len(self))
+        return int(self.block_of[end_idx - 1] - self.block_of[start_idx]) + 1
+
+
+# --------------------------------------------------------------------- build
+def build_run(keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
+              vals: np.ndarray, bits_per_key: float = 0.0,
+              assume_unique_sorted: bool = False,
+              drop_tombstones: bool = False) -> SortedRun:
+    """Sort by key, deduplicate keeping the newest seq, optionally GC deletes."""
+    keys = np.asarray(keys, dtype=KEY_DTYPE)
+    seqs = np.asarray(seqs, dtype=SEQ_DTYPE)
+    vlens = np.asarray(vlens, dtype=np.int32)
+    vals = np.asarray(vals, dtype=np.uint8)
+    if vals.ndim == 1:
+        vals = vals.reshape(len(keys), -1) if len(keys) else vals.reshape(0, 0)
+    if not assume_unique_sorted and len(keys):
+        # Stable sort by (key, -seq): newest version of each key comes first.
+        order = np.lexsort((np.iinfo(np.uint64).max - seqs, keys))
+        keys, seqs, vlens, vals = keys[order], seqs[order], vlens[order], vals[order]
+        keep = np.ones(len(keys), dtype=bool)
+        keep[1:] = keys[1:] != keys[:-1]
+        keys, seqs, vlens, vals = keys[keep], seqs[keep], vlens[keep], vals[keep]
+    if drop_tombstones and len(keys):
+        live = vlens != TOMBSTONE_LEN
+        keys, seqs, vlens, vals = keys[live], seqs[live], vlens[live], vals[live]
+    return SortedRun(keys, seqs, vlens, vals, bits_per_key=bits_per_key)
+
+
+def merge_runs(runs: Sequence[SortedRun], bits_per_key: float,
+               stats: IOStats, drop_tombstones: bool = False) -> SortedRun:
+    """K-way sort-merge (compaction). Newest seq wins on duplicate keys.
+
+    Cost model: every input block is read, every output block written; the
+    entry/byte counters feed write-amplification (paper §2.2).
+    """
+    if not runs:
+        return build_run(np.zeros(0, KEY_DTYPE), np.zeros(0, SEQ_DTYPE),
+                         np.zeros(0, np.int32), np.zeros((0, 0), np.uint8),
+                         bits_per_key)
+    vmax = max((r.vals.shape[1] if r.vals.ndim == 2 else 0) for r in runs)
+    ks, ss, ls, vs = [], [], [], []
+    for r in runs:
+        stats.blocks_read += r.n_blocks
+        ks.append(r.keys)
+        ss.append(r.seqs)
+        ls.append(r.vlens)
+        v = r.vals if r.vals.ndim == 2 else r.vals.reshape(len(r), 0)
+        if v.shape[1] < vmax:
+            v = np.pad(v, ((0, 0), (0, vmax - v.shape[1])))
+        vs.append(v)
+    out = build_run(np.concatenate(ks), np.concatenate(ss),
+                    np.concatenate(ls),
+                    np.concatenate(vs) if vmax else np.zeros((sum(map(len, runs)), 0), np.uint8),
+                    bits_per_key=bits_per_key, drop_tombstones=drop_tombstones)
+    stats.blocks_written += out.n_blocks
+    stats.entries_compacted += len(out)
+    stats.bytes_compacted += out.data_bytes
+    stats.compactions += 1
+    return out

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, MemmapCorpus, SyntheticTokens, stub_frontend_inputs

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (validated with
+interpret=True on CPU; same BlockSpecs lower via Mosaic on real TPUs):
+  bloom_probe      — batched point-read filter probes (paper §3.1 CPU cost)
+  merge_path       — bitonic two-way sorted merge (compaction)
+  paged_attention  — AutumnKV decode read path (block table = fence pointers)
+  flash_attention  — prefill/train attention (kills the XLA softmax-chain HBM
+                     traffic that dominates the dry-run roofline)
+"""
+from .ops import (bloom_probe, flash_attention, merge_runs_tiled,
+                  merge_sorted_tiles, paged_attention, split_u64)

@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: batched bloom-filter probe (the point-read CPU hotspot).
+
+The paper (§3.1 "CPU Optimization") argues filter probing is the emerging
+point-read bottleneck; Autumn reduces probe count via fewer levels, and this
+kernel makes each batch of probes one VPU pass: queries are tiled into VMEM
+blocks, the k double-hashes are computed vectorially (splitmix64 on two u32
+lanes — the TPU VPU has no u64 lanes), and the bitset is held in VMEM.
+
+TPU adaptation notes (DESIGN.md §2): the per-probe random bitset access is a
+dynamic gather; on TPU we express it as `jnp.take` over the VMEM-resident
+bitset (Mosaic lowers small-table dynamic gathers; filters larger than VMEM
+are probed level-by-level by ops.py, matching Monkey's per-level filters).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+QUERY_BLOCK = 512
+
+
+def _mix32(x: jnp.ndarray, c1: int, c2: int) -> jnp.ndarray:
+    """32-bit finalizer (murmur3-style), vectorizable on the VPU."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> jnp.uint32(16)
+    x *= jnp.uint32(c1)
+    x ^= x >> jnp.uint32(13)
+    x *= jnp.uint32(c2)
+    x ^= x >> jnp.uint32(16)
+    return x
+
+
+def hash_pair(keys_lo: jnp.ndarray, keys_hi: jnp.ndarray):
+    """Two independent 32-bit hashes from the (lo, hi) halves of u64 keys."""
+    h1 = _mix32(keys_lo ^ _mix32(keys_hi, 0x85EBCA6B, 0xC2B2AE35),
+                0xCC9E2D51, 0x1B873593)
+    h2 = _mix32(keys_hi ^ _mix32(keys_lo, 0x27D4EB2F, 0x165667B1),
+                0x9E3779B9, 0x85EBCA77) | jnp.uint32(1)
+    return h1, h2
+
+
+def bloom_probe_kernel(lo_ref, hi_ref, bits_ref, out_ref, *, k_hashes: int,
+                       m_bits: int):
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    h1, h2 = hash_pair(lo, hi)
+    maybe = jnp.ones(lo.shape, jnp.bool_)
+    m = jnp.uint32(m_bits)
+    bits = bits_ref[...]
+    for i in range(k_hashes):
+        pos = (h1 + jnp.uint32(i) * h2) % m
+        word = jnp.take(bits, (pos >> jnp.uint32(5)).astype(jnp.int32))
+        maybe &= ((word >> (pos & jnp.uint32(31))) & jnp.uint32(1)) != 0
+    out_ref[...] = maybe
+
+
+def bloom_probe_pallas(keys_lo: jax.Array, keys_hi: jax.Array,
+                       bits: jax.Array, k_hashes: int,
+                       interpret: bool = True) -> jax.Array:
+    """keys_lo/hi: (N,) uint32; bits: (W,) uint32 bitset. Returns (N,) bool."""
+    n = keys_lo.shape[0]
+    m_bits = bits.shape[0] * 32
+    block = min(QUERY_BLOCK, n)
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(bloom_probe_kernel, k_hashes=k_hashes,
+                          m_bits=m_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec(bits.shape, lambda i: (0,)),  # bitset: whole in VMEM
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.bool_),
+        interpret=interpret,
+    )(keys_lo, keys_hi, bits)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: bitonic two-way sorted merge (the compaction hotspot).
+
+Hardware adaptation (DESIGN.md §2): a CPU/GPU merge walks two cursors
+(branchy, serial) or binary-searches a merge path (dynamic control flow).
+Neither maps to the TPU VPU.  Instead we use the classic bitonic-merge
+network: concat(A, reverse(B)) of two sorted tiles is a bitonic sequence,
+and log2(2T) static compare-exchange stages — pure jnp.minimum/maximum over
+VMEM tiles with *static* strides — sort it.  Payloads (value indices) ride
+along through the same selects, so the engine can permute value rows after
+the kernel returns.
+
+ops.py composes multi-tile runs: tile boundaries are partitioned with
+jnp.searchsorted (host-side merge path), each pair of partitions is merged
+by one grid cell.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _compare_exchange(keys: jnp.ndarray, payload: jnp.ndarray, stride: int):
+    """One bitonic stage over a (2T,) tile: static-stride compare-exchange."""
+    n = keys.shape[0]
+    k2 = keys.reshape(n // (2 * stride), 2, stride)
+    p2 = payload.reshape(n // (2 * stride), 2, stride)
+    lo_k, hi_k = k2[:, 0], k2[:, 1]
+    lo_p, hi_p = p2[:, 0], p2[:, 1]
+    swap = lo_k > hi_k
+    new_lo_k = jnp.where(swap, hi_k, lo_k)
+    new_hi_k = jnp.where(swap, lo_k, hi_k)
+    new_lo_p = jnp.where(swap, hi_p, lo_p)
+    new_hi_p = jnp.where(swap, lo_p, hi_p)
+    keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
+    payload = jnp.stack([new_lo_p, new_hi_p], axis=1).reshape(n)
+    return keys, payload
+
+
+def bitonic_merge_kernel(a_ref, b_ref, pa_ref, pb_ref, ok_ref, op_ref,
+                         *, tile: int):
+    """Merge two sorted (T,) tiles (keys + payloads) into sorted (2T,)."""
+    keys = jnp.concatenate([a_ref[...], b_ref[...][::-1]])
+    payload = jnp.concatenate([pa_ref[...], pb_ref[...][::-1]])
+    stride = tile
+    while stride >= 1:
+        keys, payload = _compare_exchange(keys, payload, stride)
+        stride //= 2
+    ok_ref[...] = keys
+    op_ref[...] = payload
+
+
+def bitonic_merge_pallas(a: jax.Array, b: jax.Array, pa: jax.Array,
+                         pb: jax.Array, interpret: bool = True):
+    """a, b: sorted (n, T) tile batches; pa, pb: payloads. Returns merged
+    (n, 2T) keys + payloads — one grid cell per tile pair."""
+    n, tile = a.shape
+    kern = functools.partial(bitonic_merge_kernel, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((None, tile), lambda i: (i, 0))] * 4,
+        out_specs=[pl.BlockSpec((None, 2 * tile), lambda i: (i, 0))] * 2,
+        out_shape=[jax.ShapeDtypeStruct((n, 2 * tile), a.dtype),
+                   jax.ShapeDtypeStruct((n, 2 * tile), pa.dtype)],
+        interpret=interpret,
+    )(a, b, pa, pb)

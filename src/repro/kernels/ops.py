@@ -1,0 +1,118 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; on TPU pass
+interpret=False and the same BlockSpecs drive real Mosaic lowering).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bloom_probe import bloom_probe_pallas
+from .flash_attention import flash_attention_pallas
+from .merge_path import bitonic_merge_pallas
+from .paged_attention import paged_attention_pallas
+
+
+def split_u64(keys) -> Tuple[jax.Array, jax.Array]:
+    """u64 -> (lo32, hi32). Done in numpy: jax's default x32 mode would
+    silently truncate uint64."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys >> np.uint64(32)).astype(np.uint32)
+    return jnp.asarray(lo), jnp.asarray(hi)
+
+
+@partial(jax.jit, static_argnames=("k_hashes", "interpret"))
+def _bloom_probe_jit(lo, hi, bits, k_hashes, interpret):
+    return bloom_probe_pallas(lo, hi, bits, k_hashes, interpret=interpret)
+
+
+def bloom_probe(keys, bits: jax.Array, k_hashes: int = 7,
+                interpret: bool = True) -> jax.Array:
+    """Probe u64 keys against a u32-word bitset. Returns bool 'maybe'."""
+    lo, hi = split_u64(keys)
+    return _bloom_probe_jit(lo, hi, bits, k_hashes, interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def merge_sorted_tiles(a: jax.Array, b: jax.Array, pa: jax.Array,
+                       pb: jax.Array, interpret: bool = True):
+    """Merge batches of sorted tiles: (n,T)+(n,T) -> (n,2T) sorted."""
+    return bitonic_merge_pallas(a, b, pa, pb, interpret=interpret)
+
+
+def merge_runs_tiled(keys_a: np.ndarray, keys_b: np.ndarray,
+                     tile: int = 256, interpret: bool = True
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Full two-run merge: host-side merge-path partition (searchsorted on
+    the fence keys) + one bitonic kernel launch per tile pair.
+
+    Returns (merged_keys, source_index) where source_index encodes
+    (run_id << 32 | position) so the engine can permute value rows.
+    """
+    na, nb = len(keys_a), len(keys_b)
+    n_out = na + nb
+    # Diagonal spacing = tile: merge-path guarantees each cell consumes at
+    # most `tile` from either input; pads sort to the back (+inf), so each
+    # cell's first `consumed` outputs are exact.
+    n_tiles = max(1, -(-n_out // tile))
+    pad_val = np.iinfo(keys_a.dtype).max if \
+        np.issubdtype(keys_a.dtype, np.integer) else np.finfo(keys_a.dtype).max
+    at = np.full((n_tiles, tile), pad_val, dtype=keys_a.dtype)
+    bt = np.full((n_tiles, tile), pad_val, dtype=keys_b.dtype)
+    pa = np.zeros((n_tiles, tile), dtype=np.uint32)
+    pb = np.zeros((n_tiles, tile), dtype=np.uint32)
+    bounds_a = [0]
+    bounds_b = [0]
+    for t in range(1, n_tiles + 1):
+        d = min(t * tile, n_out)
+        lo, hi = max(0, d - nb), min(d, na)
+        while lo < hi:  # merge-path binary search on the diagonal
+            mid = (lo + hi) // 2
+            if keys_a[mid] < keys_b[d - mid - 1]:
+                lo = mid + 1
+            else:
+                hi = mid
+        bounds_a.append(lo)
+        bounds_b.append(d - lo)
+    for t in range(n_tiles):
+        ia, ja = bounds_a[t], bounds_a[t + 1]
+        ib, jb = bounds_b[t], bounds_b[t + 1]
+        at[t, :ja - ia] = keys_a[ia:ja]
+        pa[t, :ja - ia] = np.arange(ia, ja, dtype=np.uint32)
+        bt[t, :jb - ib] = keys_b[ib:jb]
+        pb[t, :jb - ib] = (np.arange(ib, jb, dtype=np.uint32) |
+                           np.uint32(1 << 31))
+    ok, op = merge_sorted_tiles(jnp.asarray(at), jnp.asarray(bt),
+                                jnp.asarray(pa), jnp.asarray(pb),
+                                interpret=interpret)
+    ok = np.asarray(ok).reshape(-1)
+    op = np.asarray(op).reshape(-1)
+    # strip padding: valid entries per cell sit at the front
+    keep = np.zeros(ok.shape[0], bool)
+    for t in range(n_tiles):
+        cnt = (bounds_a[t + 1] - bounds_a[t]) + (bounds_b[t + 1] - bounds_b[t])
+        keep[t * 2 * tile: t * 2 * tile + cnt] = True
+    return ok[keep], op[keep]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, lengths: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    return paged_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, bq: int = 128,
+                    bk: int = 128, interpret: bool = True) -> jax.Array:
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  bq=bq, bk=bk, interpret=interpret)

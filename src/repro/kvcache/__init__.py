@@ -1,0 +1,1 @@
+from .autumnkv import PAGE_TOKENS, AutumnKVCache, CacheCodec, chain_hashes

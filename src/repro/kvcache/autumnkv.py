@@ -1,0 +1,205 @@
+"""AutumnKV: an LSM-backed, content-addressed prefix cache for serving.
+
+Prompts are split into PAGE_TOKENS-token pages; each page's KV slice is
+stored in the Autumn engine under a *chain hash* (rolling hash of all tokens
+up to the page end), so:
+
+  * identical prefixes across different requests share storage (dedup),
+  * a lookup probes the chain hashes longest-first — each probe is a
+    bloom-filtered point read, the paper's O(sqrt(log N))-runs fast path;
+    misses cost ~zero block reads thanks to the Monkey allocation,
+  * recurrent/SSM state snapshots are stored in the full-prompt record, so a
+    full hit restores hybrid-arch caches exactly.
+
+v1 semantics (DESIGN.md §2): full-prompt hits skip prefill entirely; partial
+hits share storage (pages dedup) but recompute — the Pallas paged_attention
+kernel (repro.kernels) is the on-TPU read path for paged KV.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import LSMConfig, LSMStore
+from repro.core.types import splitmix64
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+PAGE_TOKENS = 64
+Pytree = Any
+
+
+def chain_hashes(tokens: np.ndarray, page: int = PAGE_TOKENS) -> List[int]:
+    """Rolling hash at each full page boundary (uint64, never 0)."""
+    out = []
+    h = np.uint64(0x243F6A8885A308D3)
+    for i, t in enumerate(np.asarray(tokens, dtype=np.uint64)):
+        h = splitmix64(np.asarray([h ^ (t + np.uint64(0x9E3779B97F4A7C15))]))[0]
+        if (i + 1) % page == 0:
+            # page keys live in the lower half-space; bit 63 tags state records
+            out.append(int(h & ((np.uint64(1) << np.uint64(63)) -
+                               np.uint64(1))) or 1)
+    return out
+
+
+def _kv_axis(logical: Tuple[Optional[str], ...]) -> Optional[int]:
+    for i, name in enumerate(logical):
+        if name == "kv_seq":
+            return i
+    return None
+
+
+@dataclasses.dataclass
+class CacheCodec:
+    """Splits a decode cache pytree into per-page KV slices + a state blob."""
+    cfg: ModelConfig
+    batch: int
+    s_max: int
+
+    def __post_init__(self):
+        self.logical = M.cache_logical_specs(self.cfg, self.batch, self.s_max)
+
+    def leaves(self, cache: Pytree):
+        flat_c = jax.tree.flatten_with_path(cache)[0]
+        flat_l = jax.tree.leaves(self.logical,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        return [(jax.tree_util.keystr(p), v, lg)
+                for (p, v), lg in zip(flat_c, flat_l)]
+
+    def page_bytes(self, cache: Pytree, page_idx: int,
+                   page: int = PAGE_TOKENS) -> bytes:
+        """Serialize every kv_seq slice [page_idx*page, (page_idx+1)*page)."""
+        parts = []
+        for path, leaf, lg in self.leaves(cache):
+            ax = _kv_axis(lg)
+            if ax is None:
+                continue
+            arr = np.asarray(leaf)
+            lo = page_idx * page
+            if lo >= arr.shape[ax]:
+                continue
+            sl = [slice(None)] * arr.ndim
+            sl[ax] = slice(lo, min(lo + page, arr.shape[ax]))
+            parts.append(np.ascontiguousarray(arr[tuple(sl)]).tobytes())
+        return b"".join(parts)
+
+    def state_bytes(self, cache: Pytree) -> bytes:
+        """Serialize every non-paged leaf (recurrent states, conv tails, pos)."""
+        parts = []
+        for path, leaf, lg in self.leaves(cache):
+            if _kv_axis(lg) is None:
+                parts.append(np.asarray(leaf).tobytes())
+        return b"".join(parts)
+
+    def write_page(self, cache: Pytree, blob: bytes, page_idx: int,
+                   page: int = PAGE_TOKENS) -> Pytree:
+        off = 0
+        flat = jax.tree.flatten_with_path(cache)
+        out = []
+        flat_l = jax.tree.leaves(self.logical,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        for (p, leaf), lg in zip(flat[0], flat_l):
+            ax = _kv_axis(lg)
+            arr = np.asarray(leaf)
+            if ax is not None and page_idx * page < arr.shape[ax]:
+                lo = page_idx * page
+                hi = min(lo + page, arr.shape[ax])
+                sl = [slice(None)] * arr.ndim
+                sl[ax] = slice(lo, hi)
+                shape = list(arr.shape)
+                shape[ax] = hi - lo
+                n = int(np.prod(shape)) * arr.dtype.itemsize
+                piece = np.frombuffer(blob[off:off + n], arr.dtype
+                                      ).reshape(shape)
+                off += n
+                arr = arr.copy()
+                arr[tuple(sl)] = piece
+            out.append(arr)
+        return jax.tree.unflatten(flat[1], out)
+
+    def write_state(self, cache: Pytree, blob: bytes) -> Pytree:
+        off = 0
+        flat = jax.tree.flatten_with_path(cache)
+        out = []
+        flat_l = jax.tree.leaves(self.logical,
+                                 is_leaf=lambda x: isinstance(x, tuple))
+        for (p, leaf), lg in zip(flat[0], flat_l):
+            arr = np.asarray(leaf)
+            if _kv_axis(lg) is None:
+                n = arr.size * arr.dtype.itemsize
+                arr = np.frombuffer(blob[off:off + n], arr.dtype
+                                    ).reshape(arr.shape).copy()
+                off += n
+            out.append(arr)
+        return jax.tree.unflatten(flat[1], out)
+
+
+_STATE_TAG = np.uint64(1) << np.uint64(63)
+
+
+class AutumnKVCache:
+    """Content-addressed page store over the Autumn LSM engine."""
+
+    def __init__(self, cfg: ModelConfig, batch: int, s_max: int,
+                 lsm_config: Optional[LSMConfig] = None,
+                 page_tokens: int = PAGE_TOKENS):
+        self.cfg = cfg
+        self.codec = CacheCodec(cfg, batch, s_max)
+        self.page = page_tokens
+        self.db = LSMStore(lsm_config or LSMConfig(
+            policy="garnering", T=2.0, c=0.8, memtable_bytes=1 << 20,
+            base_level_bytes=8 << 20, bits_per_key=10,
+            bloom_allocation="monkey"))
+        self.hits = 0
+        self.misses = 0
+        self.pages_written = 0
+        self.pages_deduped = 0
+
+    # ------------------------------------------------------------ interface
+    def lookup(self, tokens: np.ndarray, template: Pytree) -> Optional[Pytree]:
+        """Full-prompt hit: reassemble the decode cache; else None."""
+        hs = chain_hashes(tokens, self.page)
+        if not hs or len(tokens) % self.page != 0:
+            self.misses += 1
+            return None
+        state_blob = self.db.get(int(np.uint64(hs[-1]) | _STATE_TAG))
+        if state_blob is None:
+            self.misses += 1
+            return None
+        cache = self.codec.write_state(template, state_blob)
+        for i, h in enumerate(hs):
+            page_blob = self.db.get(h)
+            if page_blob is None:
+                self.misses += 1
+                return None
+            cache = self.codec.write_page(cache, page_blob, i, self.page)
+        self.hits += 1
+        return cache
+
+    def insert(self, tokens: np.ndarray, cache: Pytree):
+        hs = chain_hashes(tokens, self.page)
+        for i, h in enumerate(hs):
+            if self.db.get(h) is not None:   # content-addressed dedup
+                self.pages_deduped += 1
+                continue
+            self.db.put(h, self.codec.page_bytes(cache, i, self.page))
+            self.pages_written += 1
+        if hs:
+            self.db.put(int(np.uint64(hs[-1]) | _STATE_TAG),
+                        self.codec.state_bytes(cache))
+        self.db.flush()
+
+    def stats(self) -> Dict[str, Any]:
+        return dict(hits=self.hits, misses=self.misses,
+                    pages_written=self.pages_written,
+                    pages_deduped=self.pages_deduped,
+                    levels=self.db.num_levels_in_use,
+                    io=dataclass_asdict(self.db.stats))
+
+
+def dataclass_asdict(d) -> Dict[str, Any]:
+    import dataclasses as dc
+    return {f.name: getattr(d, f.name) for f in dc.fields(d)}

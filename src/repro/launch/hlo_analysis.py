@@ -1,0 +1,388 @@
+"""Post-SPMD HLO-text cost model for the roofline analysis.
+
+Why not ``compiled.cost_analysis()``?  XLA's HloCostAnalysis counts each
+while-loop *body once* — a scanned 56-layer stack (or a microbatch
+accumulation loop) would be under-counted by the trip count.  This module
+parses ``compiled.as_text()`` (the per-device program after GSPMD
+partitioning) into a call graph, recovers scan trip counts from loop
+condition constants, and accumulates per-device:
+
+  flops       — 2 * out_elems * contraction for every `dot` (weighted by the
+                product of enclosing trip counts).  Elementwise flops are
+                ignored (they are not the 197 TF/s MXU term).
+  hbm_bytes   — sum of operand+output bytes of every *sequenced* instruction
+                (instructions in ENTRY / while bodies / conditional branches;
+                fusion internals are counted once at their call site, which
+                is exactly XLA's fusion buffer-traffic semantics).
+  coll_bytes  — wire bytes of all-gather / all-reduce / reduce-scatter /
+                all-to-all / collective-permute, with ring-algorithm
+                multipliers and replica-group sizes.
+
+Validated against analytic model FLOPs in tests/test_dryrun.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota"}
+
+
+def _parse_shape_dims(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, dims in _parse_shape_dims(text):
+        total += _DTYPE_BYTES[dt] * math.prod(dims) if dims else _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape_text: str       # everything between '=' and the op name
+    op: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]  # instr name -> shape text
+
+
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+
+
+def _parse_instr_line(line: str):
+    """Parse `  [ROOT] %name = <shape> op(args...) ...` robustly.
+
+    Tuple shapes contain `/*index=k*/` comments (with '=' inside), so the
+    shape is scanned with paren balancing rather than a regex.
+    Returns (name, shape_text, op, args_text) or None.
+    """
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    m = re.match(r"%?([\w\.\-]+)\s*=\s*", s)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = s[m.end():]
+    if rest.startswith("("):  # tuple shape: scan to matching paren
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        shape_text, rest = rest[:i + 1], rest[i + 1:]
+    else:
+        m2 = re.match(r"[\w\[\]\{\},\d]+", rest)
+        if not m2:
+            return None
+        shape_text, rest = m2.group(0), rest[m2.end():]
+    m3 = re.match(r"\s*([\w\-]+)\(", rest)
+    if not m3:
+        return None
+    op = m3.group(1)
+    paren = rest[m3.end():]
+    depth, args = 1, []
+    for ch in paren:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args.append(ch)
+    return name, shape_text, op, "".join(args)
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line.strip() or line.startswith("HloModule"):
+            continue
+        if not line.startswith(" "):  # computation header at col 0
+            m = _HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(2), [], {})
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+                # header may declare params; record them
+                for pm in re.finditer(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|[\w\[\]\{\},]+)",
+                                      line):
+                    cur.symbols[pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        name, shape_text, op, args = parsed
+        operands = [a.strip().lstrip("%") for a in args.split(",") if a.strip()]
+        cur.symbols[name] = shape_text
+        # parameters declared as `%p = f32[..] parameter(0)` already recorded
+        cur.instrs.append(Instr(name, shape_text, op, operands, line.strip()))
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest scalar-int constant in the loop condition = scan length."""
+    best = 1
+    for ins in cond.instrs:
+        m = re.match(r"%?[\w\.\-]+\s*=\s*[su]\d+\[\]\s*constant\((\d+)\)",
+                     ins.line)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _call_edges(comp: Computation) -> List[Tuple[str, float, str]]:
+    """(callee, weight, kind) edges from a computation."""
+    edges = []
+    for ins in comp.instrs:
+        line = ins.line
+        if ins.op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", line)
+            cm = re.search(r"condition=%?([\w\.\-]+)", line)
+            if bm:
+                edges.append((bm.group(1), -1.0, "while_body"))  # weight=trip
+            if cm:
+                edges.append((cm.group(1), -1.0, "while_cond"))
+        elif ins.op == "conditional":
+            for g in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                r"true_computation=%?([\w\.\-]+)|"
+                                r"false_computation=%?([\w\.\-]+))", line):
+                for part in g:
+                    for c in re.findall(r"%?([\w\.\-]+)", part):
+                        if c:
+                            edges.append((c, 1.0, "branch"))
+        else:
+            for cm in re.finditer(r"(?:calls=|to_apply=)%?([\w\.\-]+)", line):
+                edges.append((cm.group(1), 1.0, "call"))
+    return edges
+
+
+def _multiplicities(comps: Dict[str, Computation], entry: str
+                    ) -> Dict[str, float]:
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry not in comps:
+        return {name: 1.0 for name in comps}
+    mult[entry] = 1.0
+    # call graph is a DAG; fixpoint iterate (few levels deep in practice)
+    for _ in range(16):
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        changed = False
+        for name, comp in comps.items():
+            w = mult.get(name, 0.0)
+            if w <= 0:
+                continue
+            for callee, weight, kind in _call_edges(comp):
+                if callee not in comps:
+                    continue
+                if weight < 0:  # while: weight = trip count of condition
+                    cond_name = None
+                    for c2, w2, k2 in _call_edges(comp):
+                        if k2 == "while_cond":
+                            cond_name = c2
+                    trips = _trip_count(comps[cond_name]) if cond_name else 1
+                    weight = float(trips) if kind == "while_body" else float(trips + 1)
+                new[callee] = new.get(callee, 0.0) + w * weight
+        for k in comps:
+            if abs(new.get(k, 0.0) - mult.get(k, 0.0)) > 1e-9:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    # computations never reached (dead) still get 1 for safety in flop count
+    return mult
+
+
+def _sequenced(comps: Dict[str, Computation], entry: str) -> set:
+    """ENTRY + while bodies/conds + conditional branches (not fusions)."""
+    seq = {entry}
+    frontier = [entry]
+    while frontier:
+        name = frontier.pop()
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        for callee, _, kind in _call_edges(comp):
+            if kind in ("while_body", "while_cond", "branch") and \
+                    callee in comps and callee not in seq:
+                seq.add(callee)
+                frontier.append(callee)
+    return seq
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 0
+    for dt, dims in _parse_shape_dims(ins.shape_text):
+        out_elems += math.prod(dims) if dims else 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    lhs_shape = comp.symbols.get(ins.operands[0], "") if ins.operands else ""
+    kdims = [int(d) for d in m.group(1).split(",") if d] if m else []
+    parsed = _parse_shape_dims(lhs_shape)
+    k = 1
+    if parsed and kdims:
+        dims = parsed[0][1]
+        for d in kdims:
+            if d < len(dims):
+                k *= dims[d]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    coll_count: int
+    trip_counts: Dict[str, float]
+
+
+def analyze(hlo_text: str, total_devices: int) -> HloCost:
+    comps, entry = parse_hlo(hlo_text)
+    mult = _multiplicities(comps, entry)
+    seq = _sequenced(comps, entry)
+    flops = 0.0
+    hbm = 0.0
+    coll: Dict[str, float] = {k: 0.0 for k in _COLL_KINDS}
+    n_coll = 0
+    for name, comp in comps.items():
+        w = mult.get(name, 0.0)
+        if w <= 0:
+            continue
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += w * _dot_flops(ins, comp)
+            kind = next((k for k in _COLL_KINDS
+                         if ins.op in (k, k + "-start")), None)
+            if kind is not None:
+                out_b = _bytes_of(ins.shape_text)
+                in_b = sum(_bytes_of(comp.symbols.get(o, ""))
+                           for o in ins.operands)
+                n = _group_size(ins.line, total_devices)
+                frac = (n - 1) / max(n, 1)
+                if kind == "all-gather":
+                    b = out_b * frac
+                elif kind == "reduce-scatter":
+                    b = (in_b or out_b) * frac
+                elif kind == "all-reduce":
+                    b = 2 * out_b * frac
+                elif kind == "all-to-all":
+                    b = out_b * frac
+                else:
+                    b = out_b
+                coll[kind] += w * b
+                n_coll += 1
+            if name in seq and ins.op not in _SKIP_OPS:
+                hbm += w * _instr_traffic(ins, comp, comps)
+    trips = {n: m for n, m in mult.items() if m > 1.0}
+    return HloCost(flops, hbm, sum(coll.values()), coll, n_coll, trips)
+
+
+def _instr_traffic(ins: Instr, comp: Computation,
+                   comps: Dict[str, Computation]) -> float:
+    """operand+output bytes, with dynamic-slice/update-slice awareness.
+
+    A fusion that only *dynamic-slices* a big operand (decode indexing one
+    layer of a stacked cache) physically reads the slice, not the buffer;
+    a fusion rooted in dynamic-update-slice writes the update region in
+    place.  Counting full buffers would overstate decode HBM traffic by the
+    layer count (observed 100x on the qwen3 decode cell — §Perf).
+    """
+    out_b = _bytes_of(ins.shape_text)
+    callee = None
+    m = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+    if ins.op == "fusion" and m:
+        callee = comps.get(m.group(1))
+    if callee is None:
+        return out_b + sum(_bytes_of(comp.symbols.get(o, ""))
+                           for o in ins.operands)
+    # map fusion params -> how they are consumed inside
+    param_shape: Dict[int, str] = {}
+    param_name_to_idx: Dict[str, int] = {}
+    for fi in callee.instrs:
+        pm = re.match(r"%?([\w\.\-]+)\s*=.*parameter\((\d+)\)",
+                      fi.line.replace("ROOT ", ""))
+        if pm:
+            param_name_to_idx[pm.group(1)] = int(pm.group(2))
+            param_shape[int(pm.group(2))] = fi.shape_text
+    sliced_only: Dict[int, float] = {}
+    full_use: set = set()
+    # in-place DUS detection: any DUS inside the fusion whose target is a
+    # parameter with the fusion's output shape (roots are often wrapped in
+    # convert/bitcast, so match on shape rather than rootness)
+    out_dims = _parse_shape_dims(ins.shape_text)
+    for fi in callee.instrs:
+        if fi.op != "dynamic-update-slice" or not fi.operands:
+            continue
+        tgt = fi.operands[0]
+        if tgt in param_name_to_idx and \
+                _parse_shape_dims(callee.symbols.get(tgt, ""))[:1] and \
+                _parse_shape_dims(callee.symbols.get(tgt, ""))[0][1] == \
+                (out_dims[0][1] if out_dims else None):
+            upd = fi.operands[1] if len(fi.operands) > 1 else None
+            upd_b = _bytes_of(callee.symbols.get(upd, "")) if upd else 0
+            idx = param_name_to_idx[tgt]
+            sliced_only[idx] = sliced_only.get(idx, 0.0) + upd_b
+            out_b = upd_b  # written in place: only the region
+    for fi in callee.instrs:
+        for oi, o in enumerate(fi.operands):
+            if o not in param_name_to_idx:
+                continue
+            idx = param_name_to_idx[o]
+            if fi.op == "dynamic-slice":
+                sliced_only[idx] = sliced_only.get(idx, 0.0) + \
+                    _bytes_of(fi.shape_text)
+            elif fi.op == "dynamic-update-slice" and oi == 0 and \
+                    idx in sliced_only:
+                pass  # already accounted as the in-place region
+            else:
+                full_use.add(idx)
+    total = out_b
+    for i, o in enumerate(ins.operands):
+        b = _bytes_of(comp.symbols.get(o, ""))
+        if i in sliced_only and i not in full_use:
+            b = min(b, sliced_only[i])
+        total += b
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups, group_size]
+        return max(int(m.group(2)), 1)
+    return total_devices

@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis rules and the activation Sharder.
+
+Rules are built per (model config, mesh, mode, global batch) so divisibility
+fallbacks are explicit rather than left to GSPMD padding (which would
+silently waste up to 4x on e.g. gemma3's 4 query heads over a 16-way model
+axis — DESIGN.md §4):
+
+  * heads/kv_heads/expert shard over 'model' only when divisible;
+  * decode KV caches shard their *sequence* dim over 'model' whenever the kv
+    head count cannot use the axis (flash-decoding style: GSPMD turns the
+    softmax/contraction over the sharded key axis into small all-reduces);
+  * batch=1 cells (long_500k) additionally fold the idle 'data' axis into
+    the cache sequence sharding.
+
+``spec_for`` assigns mesh axes greedily left-to-right, dropping duplicates,
+so a single rule table cannot produce an invalid PartitionSpec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from .mesh import dp_axes
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+
+def make_rules(cfg: ModelConfig, mesh, mode: str = "train",
+               global_batch: int = 0, seq_len: int = 0
+               ) -> Tuple[Rules, Rules]:
+    """Returns (param_rules, act_rules)."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model = "model" if "model" in axes else None
+    msize = axes.get("model", 1)
+    dp = dp_axes(mesh)
+    dpsize = 1
+    for a in dp:
+        dpsize *= axes[a]
+
+    def div(n: int):
+        return model if (model and n and n % msize == 0) else None
+
+    rec_width = (cfg.rglru.width or cfg.d_model) if cfg.rglru else 0
+    param_rules: Rules = {
+        "vocab": model,
+        "embed": dp,                       # FSDP/ZeRO over the data axes
+        "mlp": model,
+        "heads": div(cfg.n_q),
+        "kv_heads": div(cfg.n_kv),
+        "head_dim": None,
+        "expert": div(cfg.moe.num_experts) if cfg.moe else None,
+        "ssm_inner": None,
+        "ssm_heads": None,
+        "ssm_state": None,
+        "rec": div(rec_width),
+        "rec_in": None,
+        "rec_blocks": div(cfg.rglru.gate_blocks) if cfg.rglru else None,
+        "rec_blk_in": None,
+        "rec_blk_out": None,
+        "conv_w": None,
+        "norm": None,
+        "layers": None,
+        "enc_seq": None,
+    }
+
+    batch_rule: Union[None, Tuple[str, ...]] = dp
+    if global_batch and dpsize and global_batch % dpsize != 0:
+        batch_rule = None  # e.g. long_500k's global_batch=1
+    total_heads = cfg.n_q  # post repeat-KV, every attention axis has n_q heads
+    heads_rule = div(total_heads)
+    # Sequence parallelism fallback: when heads cannot use the model axis
+    # (smollm 9H, gemma3 4H, minicpm 36H, recurrentgemma 10H), shard the
+    # query-sequence dim of activations instead.
+    sp = (mode in ("train", "prefill") and heads_rule is None and model
+          and seq_len and seq_len % msize == 0)
+    seq_rule = model if sp else None
+    # KV caches shard their sequence dim whenever the raw KV head count
+    # cannot use the model axis (GQA kv=8 on a 16-way axis is the common
+    # case).  Decode then runs flash-decoding style: scores sharded over the
+    # key sequence, softmax stats + PV partials combined by small
+    # all-reduces — so the query heads must stay replicated in decode.
+    kv_seq: Union[None, str, Tuple[str, ...]] = None
+    att_kv_seq: Union[None, str, Tuple[str, ...]] = None
+    if mode in ("prefill", "decode") and div(cfg.n_kv) is None:
+        kv_seq = model
+        if batch_rule is None:
+            kv_seq = dp + (model,) if model else dp
+        if mode == "decode":
+            att_kv_seq = kv_seq
+            heads_rule = None
+    act_rules: Rules = {
+        "batch": batch_rule,
+        "seq": seq_rule,
+        "embed": None,
+        "mlp": model,
+        "heads": heads_rule,
+        "kv_heads": div(cfg.n_kv),
+        "head_dim": None,
+        "vocab": model,
+        "expert": div(cfg.moe.num_experts) if cfg.moe else None,
+        "kv_seq": kv_seq,
+        "att_kv_seq": att_kv_seq,
+        "enc_seq": None,
+        "ssm_inner": None,
+        "ssm_heads": None,
+        "ssm_state": None,
+        "rec": div(rec_width),
+        "rec_in": None,
+        "rec_blocks": div(cfg.rglru.gate_blocks) if cfg.rglru else None,
+        "rec_blk_in": None,
+        "rec_blk_out": None,
+        "layers": None,
+        "conv_w": None,
+    }
+    return param_rules, act_rules
+
+
+def spec_for(logical: Sequence[Optional[str]], rules: Rules) -> P:
+    used: set = set()
+    parts = []
+    for name in logical:
+        m = rules.get(name) if name is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        ms = (m,) if isinstance(m, str) else tuple(m)
+        ms = tuple(a for a in ms if a not in used)
+        if not ms:
+            parts.append(None)
+        else:
+            used.update(ms)
+            parts.append(ms[0] if len(ms) == 1 else ms)
+    return P(*parts)
+
+
+def tree_shardings(logical_tree: Any, mesh, rules: Rules) -> Any:
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda lg: NamedSharding(mesh, spec_for(lg, rules)),
+        logical_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+class Sharder:
+    """Activation sharding-constraint callback passed through the model."""
+
+    def __init__(self, mesh=None, act_rules: Optional[Rules] = None):
+        self.mesh = mesh
+        self.rules = act_rules or {}
+
+    def __call__(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        spec = spec_for(logical, self.rules)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def is_sharded(self, name: str) -> bool:
+        return bool(self.rules.get(name))

@@ -1,0 +1,133 @@
+"""Per-cell (arch x shape x mesh) abstract inputs + step functions.
+
+Everything here is ShapeDtypeStruct-based (the shannon/kernels pattern):
+weak-type-correct, sharding-annotated, zero device allocation — consumed by
+dryrun.py for lower()+compile() and by benchmarks/roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, ShapeSpec, get_config, shape_applicable
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.params import abstract_params, logical_specs
+from repro.train.optimizer import OptConfig
+from repro.train.step import make_train_step
+from .sharding import Sharder, make_rules, spec_for, tree_shardings
+
+Pytree = Any
+
+# Microbatch (gradient-accumulation) factors for the train_4k shape — the
+# activation-memory lever for the biggest configs (DESIGN.md §4); sized from
+# the dry-run memory_analysis so every cell fits 16 GiB/chip (v5e).
+TRAIN_ACCUM: Dict[str, int] = {
+    "mixtral_8x22b": 16,
+    "llama32_vision_90b": 16,
+    "qwen3_4b": 4,
+    "minicpm_2b": 2,
+    "whisper_medium": 2,
+    "granite_moe_1b_a400m": 4,
+    "recurrentgemma_2b": 2,
+    "gemma3_1b": 2,
+}
+
+
+def _sds(shape, dtype, sharding=None):
+    if sharding is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _with_shardings(abs_tree: Pytree, shardings: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda a, s: _sds(a.shape, a.dtype, s), abs_tree, shardings)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Callable          # the step function to jit
+    args: Tuple           # abstract args with shardings attached
+    mode: str
+    accum: int = 1
+    donate: Tuple[int, ...] = ()
+
+    @property
+    def name(self) -> str:
+        return f"{self.arch}/{self.shape.name}"
+
+
+def opt_abstract(params_abs: Pytree, param_shardings: Pytree) -> Pytree:
+    m = jax.tree.map(lambda a, s: _sds(a.shape, jnp.float32, s),
+                     params_abs, param_shardings)
+    v = jax.tree.map(lambda a, s: _sds(a.shape, jnp.float32, s),
+                     params_abs, param_shardings)
+    return {"m": m, "v": v, "step": _sds((), jnp.int32)}
+
+
+def build_cell(arch: str, shape_name: str, mesh,
+               cfg_override: Optional[ModelConfig] = None,
+               opt_cfg: Optional[OptConfig] = None,
+               accum: Optional[int] = None) -> Cell:
+    cfg = cfg_override or get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch}/{shape_name}: {why}")
+    param_rules, act_rules = make_rules(cfg, mesh, shape.mode,
+                                        shape.global_batch, shape.seq_len)
+    sharder = Sharder(mesh, act_rules)
+    p_abs = abstract_params(cfg)
+    p_shard = tree_shardings(logical_specs(cfg), mesh, param_rules)
+    params_arg = _with_shardings(p_abs, p_shard)
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = NamedSharding(mesh, spec_for(("batch", "seq"), act_rules))
+    emb3_sh = NamedSharding(mesh, spec_for(("batch", "enc_seq", "embed"),
+                                           act_rules))
+
+    def batch_specs(seq: int) -> Dict[str, Any]:
+        out = {"tokens": _sds((B, seq), jnp.int32, tok_sh)}
+        if cfg.encoder is not None:
+            out["enc_frames"] = _sds((B, cfg.encoder.seq_len, cfg.d_model),
+                                     jnp.float32, emb3_sh)
+        if cfg.vision is not None:
+            out["img_embeds"] = _sds((B, cfg.vision.n_img_tokens, cfg.d_model),
+                                     jnp.float32, emb3_sh)
+        return out
+
+    if shape.mode == "train":
+        acc = accum if accum is not None else TRAIN_ACCUM.get(arch, 1)
+        ocfg = opt_cfg or OptConfig()
+        step = make_train_step(cfg, ocfg, sharder, accum_steps=acc)
+        batch = dict(batch_specs(S), labels=_sds((B, S), jnp.int32, tok_sh))
+        args = (params_arg, opt_abstract(p_abs, p_shard), batch)
+        return Cell(arch, shape, cfg, step, args, "train", acc,
+                    donate=(0, 1))
+    if shape.mode == "prefill":
+        fn = partial(M.prefill, cfg=cfg, s_max=S, shard=sharder)
+
+        def prefill_fn(params, batch):
+            return fn(params, batch)
+
+        args = (params_arg, batch_specs(S))
+        return Cell(arch, shape, cfg, prefill_fn, args, "prefill")
+    # decode: one new token against a cache of seq_len
+    cache_abs = M.abstract_cache(cfg, B, S)
+    cache_sh = tree_shardings(M.cache_logical_specs(cfg, B, S), mesh,
+                              act_rules)
+    cache_arg = _with_shardings(cache_abs, cache_sh)
+
+    def decode_fn(params, tokens, cache):
+        return M.decode_step(params, tokens, cache, cfg, sharder)
+
+    args = (params_arg, _sds((B, 1), jnp.int32, tok_sh), cache_arg)
+    return Cell(arch, shape, cfg, decode_fn, args, "decode", donate=(2,))

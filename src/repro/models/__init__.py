@@ -1,0 +1,7 @@
+from .config import (EncoderConfig, ModelConfig, MoEConfig, RGLRUConfig,
+                     SSMConfig, Stage, VisionConfig, expand_stages,
+                     find_stages)
+from .params import (abstract_params, count_params, init_params,
+                     logical_specs, param_table)
+from .model import (abstract_cache, cache_logical_specs, decode_step,
+                    init_cache, loss_fn, prefill)

@@ -1,0 +1,388 @@
+"""Per-kind transformer/SSM/recurrent blocks in three modes:
+  train   — full sequence, no cache (remat-friendly)
+  prefill — full sequence, emits a decode cache
+  decode  — one token, consumes + updates the cache
+
+Decode KV caches are ring buffers: slot = pos % S_cache, and each slot's
+absolute position is reconstructed as  kp = pos - ((pos - slot) % S_cache),
+which (a) makes sliding-window caches exactly window-sized and (b) reduces to
+the ordinary prefix cache when S_cache >= pos (stale slots fall out of the
+causal mask).  This is the block-table-free analog of AutumnKV's fence
+pointers for the in-step hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Shard, attn_output, attn_project_qkv, causal_conv1d,
+                     causal_conv1d_step, dense_mlp, gqa_attention,
+                     identity_shard, mlp, rglru_scan, rglru_step, rms_norm,
+                     rope, ssd_scan, ssd_step)
+
+Params = Dict[str, Any]
+Cache = Dict[str, jax.Array]
+Ctx = Dict[str, Any]   # positions / enc_out / img_embeds / pos scalar
+
+
+def ring_positions(pos: jax.Array, s_cache: int) -> jax.Array:
+    slots = jnp.arange(s_cache, dtype=jnp.int32)
+    return pos - ((pos - slots) % s_cache)
+
+
+# ====================================================================== attn
+def _self_attn(p: Params, h: jax.Array, cfg: ModelConfig, shard: Shard,
+               positions: jax.Array, window: Optional[int]) -> jax.Array:
+    q, k, v = attn_project_qkv(p, h, h, cfg, positions, positions, shard)
+    ctxv = gqa_attention(q, k, v, q_positions=positions, k_positions=positions,
+                         causal=True, window=window, q_chunk=cfg.q_chunk,
+                         scores_dtype=cfg.scores_dtype, shard=shard)
+    return attn_output(p, ctxv, h.dtype)
+
+
+def attn_train(kind: str, p: Params, x: jax.Array, ctx: Ctx, cfg: ModelConfig,
+               shard: Shard) -> Tuple[jax.Array, jax.Array]:
+    window = cfg.window if kind == "lattn" else None
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    x = x + _self_attn(p, h, cfg, shard, ctx["positions"], window)
+    x = shard(x, "batch", "seq", "embed")
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return shard(x + y, "batch", "seq", "embed"), aux
+
+
+def attn_prefill(kind: str, p: Params, x: jax.Array, ctx: Ctx,
+                 cfg: ModelConfig, shard: Shard
+                 ) -> Tuple[jax.Array, Cache, jax.Array]:
+    window = cfg.window if kind == "lattn" else None
+    S = x.shape[1]
+    s_cache = min(window, ctx["s_max"]) if window else ctx["s_max"]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    q, k, v = attn_project_qkv(p, h, h, cfg, ctx["positions"],
+                               ctx["positions"], shard)
+    ctxv = gqa_attention(q, k, v, q_positions=ctx["positions"],
+                         k_positions=ctx["positions"], causal=True,
+                         window=window, q_chunk=cfg.q_chunk,
+                         scores_dtype=cfg.scores_dtype, shard=shard)
+    x = x + attn_output(p, ctxv, x.dtype)
+    B, _, KH, dh = k.shape
+    ck = jnp.zeros((B, s_cache, KH, dh), k.dtype)
+    cv = jnp.zeros((B, s_cache, KH, dh), v.dtype)
+    take = min(S, s_cache)
+    slots = (jnp.arange(take) + S - take) % s_cache
+    ck = ck.at[:, slots].set(k[:, S - take:])
+    cv = cv.at[:, slots].set(v[:, S - take:])
+    cache = {"k": shard(ck, "batch", "kv_seq", "kv_heads", "head_dim"),
+             "v": shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")}
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return shard(x + y, "batch", "seq", "embed"), cache, aux
+
+
+def attn_decode(kind: str, p: Params, cache: Cache, x: jax.Array, ctx: Ctx,
+                cfg: ModelConfig, shard: Shard
+                ) -> Tuple[jax.Array, Cache]:
+    window = cfg.window if kind == "lattn" else None
+    pos = ctx["pos"]                                   # scalar int32
+    h = rms_norm(x, p["ln"], cfg.norm_eps)             # (B,1,D)
+    B = x.shape[0]
+    qpos = jnp.full((B, 1), pos, jnp.int32)
+    q, k, v = attn_project_qkv(p, h, h, cfg, qpos, qpos, shard)
+    s_cache = cache["k"].shape[1]
+    slot = (pos % s_cache).astype(jnp.int32)
+    from .layers import shard_knows
+    if shard_knows(shard, "kv_seq"):
+        # Sequence-sharded cache: a dynamic-update-slice on the sharded dim
+        # would make GSPMD gather the cache; a one-hot masked select is fully
+        # elementwise and stays sharded (the Pallas paged-attention kernel
+        # replaces this read-modify-write on real TPUs).
+        sel = (jnp.arange(s_cache, dtype=jnp.int32) == slot)[None, :, None,
+                                                             None]
+        ck = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    ck = shard(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+    cv = shard(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+    kp = ring_positions(pos, s_cache)[None]            # (1, S_c) broadcast
+    ctxv = gqa_attention(q, ck, cv, q_positions=qpos, k_positions=kp,
+                         causal=True, window=window, q_chunk=cfg.q_chunk,
+                         scores_dtype=cfg.scores_dtype, shard=shard)
+    x = x + attn_output(p, ctxv, x.dtype)
+    y, _ = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, {"k": ck, "v": cv}
+
+
+# ================================================================ cross-attn
+def _cross_attn(p: Params, h: jax.Array, src_k: jax.Array, src_v: jax.Array,
+                cfg: ModelConfig, shard: Shard) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    Sk = src_k.shape[1]
+    kpos = jnp.zeros((1, Sk), jnp.int32)
+    qpos = jnp.zeros(h.shape[:2], jnp.int32)
+    ctxv = gqa_attention(q, src_k, src_v, q_positions=qpos, k_positions=kpos,
+                         causal=False, window=None, q_chunk=cfg.q_chunk,
+                         scores_dtype=cfg.scores_dtype, shard=shard)
+    return attn_output(p, ctxv, h.dtype)
+
+
+def cross_kv(p: Params, src: jax.Array, cfg: ModelConfig,
+             shard: Shard) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(src.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(src.dtype))
+    if cfg.qk_norm and "k_norm" in p:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    k = shard(k, "batch", "enc_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "enc_seq", "kv_heads", "head_dim")
+    return k, v
+
+
+def xattn_train(kind: str, p: Params, x: jax.Array, ctx: Ctx, cfg: ModelConfig,
+                shard: Shard) -> Tuple[jax.Array, jax.Array]:
+    src = ctx["img_embeds"]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    k, v = cross_kv(p, src, cfg, shard)
+    gate = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + gate * _cross_attn(p, h, k, v, cfg, shard)
+    mgate = jnp.tanh(p["mgate"].astype(jnp.float32)).astype(x.dtype)
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + mgate * y, aux
+
+
+def xattn_prefill(kind, p, x, ctx, cfg, shard):
+    src = ctx["img_embeds"]
+    k, v = cross_kv(p, src, cfg, shard)
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + gate * _cross_attn(p, h, k, v, cfg, shard)
+    mgate = jnp.tanh(p["mgate"].astype(jnp.float32)).astype(x.dtype)
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + mgate * y, {"k": k, "v": v}, aux
+
+
+def xattn_decode(kind, p, cache, x, ctx, cfg, shard):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype)
+    x = x + gate * _cross_attn(p, h, cache["k"], cache["v"], cfg, shard)
+    mgate = jnp.tanh(p["mgate"].astype(jnp.float32)).astype(x.dtype)
+    y, _ = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + mgate * y, cache
+
+
+# ========================================== whisper decoder (self + cross)
+def wdec_train(kind, p, x, ctx, cfg, shard):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    x = x + _self_attn(p, h, cfg, shard, ctx["positions"], None)
+    hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    k, v = cross_kv(p["x"], ctx["enc_out"], cfg, shard)
+    x = x + _cross_attn(p["x"], hx, k, v, cfg, shard)
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, aux
+
+
+def wdec_prefill(kind, p, x, ctx, cfg, shard):
+    x, self_cache, _ = attn_prefill("attn", {**p, "mlp": _NOOP_MLP}, x,
+                                    ctx, cfg, shard)
+    hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    k, v = cross_kv(p["x"], ctx["enc_out"], cfg, shard)
+    x = x + _cross_attn(p["x"], hx, k, v, cfg, shard)
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, {**self_cache, "xk": k, "xv": v}, aux
+
+
+def wdec_decode(kind, p, cache, x, ctx, cfg, shard):
+    x, self_cache = attn_decode("attn", {**p, "mlp": _NOOP_MLP},
+                                {"k": cache["k"], "v": cache["v"]},
+                                x, ctx, cfg, shard)
+    hx = rms_norm(x, p["ln_x"], cfg.norm_eps)
+    x = x + _cross_attn(p["x"], hx, cache["xk"], cache["xv"], cfg, shard)
+    y, _ = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, {**self_cache, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+class _Noop(dict):
+    """mlp params stand-in that contributes zero (used to reuse attn blocks)."""
+
+
+_NOOP_MLP = _Noop()
+
+
+# ================================================================== Mamba-2
+def _ssd_proj(p: Params, x: jax.Array, cfg: ModelConfig, shard: Shard):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"].astype(x.dtype))
+    proj = shard(proj, "batch", "seq", "ssm_inner")
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner:2 * d_inner + 2 * s.d_state]
+    dt_raw = proj[..., 2 * d_inner + 2 * s.d_state:]
+    return z, xBC, dt_raw, d_inner, H
+
+
+def _ssd_split(xBC, d_inner, d_state):
+    return (xBC[..., :d_inner], xBC[..., d_inner:d_inner + d_state],
+            xBC[..., d_inner + d_state:])
+
+
+def _ssd_chunk(S: int, pref: int) -> int:
+    """Largest divisor of S not exceeding the preferred chunk size."""
+    for c in range(min(pref, S), 0, -1):
+        if S % c == 0:
+            return c
+    return 1
+
+
+def ssd_train(kind, p, x, ctx, cfg, shard):
+    s = cfg.ssm
+    z, xBC, dt_raw, d_inner, H = _ssd_proj(p, x, cfg, shard)
+    xBC = jax.nn.silu(causal_conv1d(xBC, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = _ssd_split(xBC, d_inner, s.d_state)
+    B_, S, _ = x.shape
+    xh = xs.reshape(B_, S, H, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    chunk = _ssd_chunk(S, s.chunk)
+    y, _ = ssd_scan(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None].astype(x.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    x = shard(x + out, "batch", "seq", "embed")
+    if "mlp" in p:
+        y2, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+        return x + y2, aux
+    return x, jnp.zeros((), jnp.float32)
+
+
+def ssd_prefill(kind, p, x, ctx, cfg, shard):
+    s = cfg.ssm
+    z, xBC, dt_raw, d_inner, H = _ssd_proj(p, x, cfg, shard)
+    conv_in = xBC
+    xBC = jax.nn.silu(causal_conv1d(conv_in, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = _ssd_split(xBC, d_inner, s.d_state)
+    B_, S, _ = x.shape
+    xh = xs.reshape(B_, S, H, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    chunk = _ssd_chunk(S, s.chunk)
+    y, state = ssd_scan(xh, dt, A, Bm, Cm, chunk)
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None].astype(x.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    x = x + out
+    cache = {"state": state,                              # (B,H,P,N) fp32
+             "conv": conv_in[:, S - (s.conv_width - 1):]}  # (B,K-1,convdim)
+    if "mlp" in p:
+        y2, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+        return x + y2, cache, aux
+    return x, cache, jnp.zeros((), jnp.float32)
+
+
+def ssd_decode(kind, p, cache, x, ctx, cfg, shard):
+    s = cfg.ssm
+    z, xBC, dt_raw, d_inner, H = _ssd_proj(p, x, cfg, shard)
+    xBC_t, conv_state = causal_conv1d_step(xBC[:, 0], cache["conv"],
+                                           p["conv_w"], p["conv_b"])
+    xBC_t = jax.nn.silu(xBC_t)
+    xs = xBC_t[..., :d_inner]
+    B_t = xBC_t[..., d_inner:d_inner + s.d_state]
+    C_t = xBC_t[..., d_inner + s.d_state:]
+    B_ = x.shape[0]
+    xh = xs.reshape(B_, H, s.head_dim)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, state = ssd_step(xh, dt, A, B_t, C_t, cache["state"])
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None].astype(x.dtype)
+    y = y.reshape(B_, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype))
+    x = x + out
+    new_cache = {"state": state, "conv": conv_state}
+    if "mlp" in p:
+        y2, _ = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+        x = x + y2
+    return x, new_cache
+
+
+# =================================================================== RG-LRU
+def _rglru_gates(p: Params, x: jax.Array, cfg: ModelConfig, shard: Shard):
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, p["wy"].astype(x.dtype)))
+    u = jnp.einsum("bsd,dw->bsw", h, p["wx"].astype(x.dtype))
+    return shard(u, "batch", "seq", "rec"), shard(gate, "batch", "seq", "rec")
+
+
+def _rglru_ri(p, u):
+    if p["wa_gate"].ndim == 3:  # block-diagonal gates (Griffin): TP-local
+        B_, S_, W_ = u.shape
+        nb, wb, _ = p["wa_gate"].shape
+        ub = u.reshape(B_, S_, nb, wb)
+        r = jnp.einsum("bsnw,nwv->bsnv", ub, p["wa_gate"].astype(u.dtype)
+                       ).reshape(B_, S_, W_) + p["ba_gate"].astype(u.dtype)
+        i = jnp.einsum("bsnw,nwv->bsnv", ub, p["wi_gate"].astype(u.dtype)
+                       ).reshape(B_, S_, W_) + p["bi_gate"].astype(u.dtype)
+        return jax.nn.sigmoid(r), jax.nn.sigmoid(i)
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["wa_gate"].astype(u.dtype))
+                       + p["ba_gate"].astype(u.dtype))
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", u, p["wi_gate"].astype(u.dtype))
+                       + p["bi_gate"].astype(u.dtype))
+    return r, i
+
+
+def rglru_train(kind, p, x, ctx, cfg, shard):
+    u, gate = _rglru_gates(p, x, cfg, shard)
+    u = causal_conv1d(u, p["conv_w"], p["conv_b"])
+    r, i = _rglru_ri(p, u)
+    h, _ = rglru_scan(u, r, i, p["Lambda"], cfg.rglru.power)
+    out = jnp.einsum("bsw,wd->bsd", h * gate, p["wout"].astype(x.dtype))
+    x = shard(x + out, "batch", "seq", "embed")
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, aux
+
+
+def rglru_prefill(kind, p, x, ctx, cfg, shard):
+    u_raw, gate = _rglru_gates(p, x, cfg, shard)
+    u = causal_conv1d(u_raw, p["conv_w"], p["conv_b"])
+    r, i = _rglru_ri(p, u)
+    h, h_last = rglru_scan(u, r, i, p["Lambda"], cfg.rglru.power)
+    out = jnp.einsum("bsw,wd->bsd", h * gate, p["wout"].astype(x.dtype))
+    x = x + out
+    K = cfg.rglru.conv_width
+    cache = {"h": h_last.astype(jnp.float32),
+             "conv": u_raw[:, x.shape[1] - (K - 1):]}
+    y, aux = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, cache, aux
+
+
+def rglru_decode(kind, p, cache, x, ctx, cfg, shard):
+    u_raw, gate = _rglru_gates(p, x, cfg, shard)
+    u_t, conv_state = causal_conv1d_step(u_raw[:, 0], cache["conv"],
+                                         p["conv_w"], p["conv_b"])
+    r, i = _rglru_ri(p, u_t[:, None])
+    h, h_new = rglru_step(u_t, r[:, 0], i[:, 0], p["Lambda"],
+                          cfg.rglru.power, cache["h"])
+    out = jnp.einsum("bw,wd->bd", h * gate[:, 0], p["wout"].astype(x.dtype))
+    x = x + out[:, None]
+    y, _ = mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg, shard)
+    return x + y, {"h": h_new, "conv": conv_state}
+
+
+# ------------------------------------------------------------------ routing
+TRAIN = {"attn": attn_train, "lattn": attn_train, "xattn": xattn_train,
+         "wdec": wdec_train, "ssd": ssd_train, "rglru": rglru_train}
+PREFILL = {"attn": attn_prefill, "lattn": attn_prefill, "xattn": xattn_prefill,
+           "wdec": wdec_prefill, "ssd": ssd_prefill, "rglru": rglru_prefill}
+DECODE = {"attn": attn_decode, "lattn": attn_decode, "xattn": xattn_decode,
+          "wdec": wdec_decode, "ssd": ssd_decode, "rglru": rglru_decode}

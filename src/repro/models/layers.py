@@ -1,0 +1,399 @@
+"""Compute layers shared by all 10 architectures (pure JAX, jit/scan-safe).
+
+Conventions:
+  x          : (B, S, D) activations, compute_dtype (bf16)
+  attention  : q (B,S,H,dh), kv (B,S,KH,dh); GQA groups G = H // KH
+  shard(x, *logical) : activation sharding-constraint callback (identity on CPU)
+All softmax/norm statistics are computed in float32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+Shard = Callable[..., jax.Array]
+NEG_INF = -1e30
+
+
+class _IdentityShard:
+    """No-op Sharder (single-device tests)."""
+
+    def __call__(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        return x
+
+    def is_sharded(self, name: str) -> bool:
+        return False
+
+
+identity_shard = _IdentityShard()
+
+
+def shard_knows(shard: "Shard", name: str) -> bool:
+    fn = getattr(shard, "is_sharded", None)
+    return bool(fn(name)) if fn else False
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dt)
+
+
+# -------------------------------------------------------------------- rope
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh) rotated by position; positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: Optional[int], k_len: Optional[jax.Array]) -> jax.Array:
+    """(…, Sq, Sk) additive bias. window counts positions (q-w, q]."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = kp >= 0  # ring-buffer slots that were never written carry kp < 0
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    if k_len is not None:
+        ok &= kp < k_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  q_positions: jax.Array, k_positions: jax.Array,
+                  causal: bool, window: Optional[int],
+                  k_len: Optional[jax.Array] = None,
+                  q_chunk: int = 1024,
+                  scores_dtype: str = "float32",
+                  shard: Shard = identity_shard) -> jax.Array:
+    """Memory-bounded GQA attention (repeat-KV formulation).
+
+    q: (B,Sq,H,dh), k/v: (B,Sk,KH,dh) with H = G*KH.  KV heads are repeated
+    to H before the contraction so every einsum carries a single `h` axis —
+    this keeps TP sharding trivial (heads over 'model') and, when the KV
+    *sequence* is the sharded axis instead (flash-decoding for GQA counts
+    that don't divide the mesh), GSPMD reduces the softmax stats and PV
+    partial sums with two small all-reduces.  Scores materialize one q-chunk
+    at a time (q_chunk), bounding the fp32 score buffer.
+    """
+    B, Sq, H, dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(dh)
+    sdt = jnp.dtype(scores_dtype)
+
+    if Sq == 1 and G > 1:
+        # Decode fast path: grouped einsum against the *unrepeated* cache —
+        # avoids materializing a Gx copy of the KV cache per step (§Perf).
+        k = shard(k, "batch", "att_kv_seq", "kv_heads", "head_dim")
+        v = shard(v, "batch", "att_kv_seq", "kv_heads", "head_dim")
+        qg = q.reshape(B, 1, KH, G, dh)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                       preferred_element_type=sdt) * scale
+        bias = _mask_bias(q_positions, k_positions, causal, window, k_len)
+        s = s + bias[:, None, None].astype(sdt)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jax.lax.stop_gradient(m))
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(jnp.transpose(l, (0, 3, 1, 2, 4)),
+                            1e-30).astype(jnp.float32)
+        return o.reshape(B, 1, H, dh).astype(q.dtype)
+
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    # 'att_kv_seq' (not 'kv_seq'): the in-attention KV sharding can differ
+    # from the cache-storage sharding (SP-prefill gathers KV while the cache
+    # stays sequence-sharded for decode).
+    k = shard(k, "batch", "att_kv_seq", "heads", "head_dim")
+    v = shard(v, "batch", "att_kv_seq", "heads", "head_dim")
+
+    def attend(q_blk: jax.Array, qpos_blk: jax.Array) -> jax.Array:
+        # q_blk: (B, C, H, dh).  The softmax normalizer is folded into the
+        # (C, dh)-sized output instead of a (C, Sk)-sized divide pass.
+        # Re-assert SP inside the chunk loop: slicing a seq-sharded array
+        # into chunks makes GSPMD replicate each chunk otherwise, and every
+        # device would redundantly compute the full chunk (16x waste).
+        q_blk = shard(q_blk, "batch", "seq", "heads", "head_dim")
+        s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k,
+                       preferred_element_type=sdt) * scale
+        bias = _mask_bias(qpos_blk, k_positions, causal, window, k_len)
+        s = s + bias[:, None].astype(sdt)            # (B,H,C,Sk)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jax.lax.stop_gradient(m))
+        l = jnp.sum(p, axis=-1, keepdims=True)       # (B,H,C,1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        o = o / jnp.maximum(l.swapaxes(1, 2), 1e-30).astype(jnp.float32)
+        return o.astype(q.dtype)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return attend(q, q_positions)
+    nq = Sq // q_chunk
+    qc = q.reshape(B, nq, q_chunk, H, dh).swapaxes(0, 1)
+    pc = q_positions.reshape(B, nq, q_chunk).swapaxes(0, 1) \
+        if q_positions.ndim == 2 else q_positions.reshape(nq, q_chunk)
+    out = jax.lax.map(lambda args: attend(*args), (qc, pc))
+    return out.swapaxes(0, 1).reshape(B, Sq, H, dh)
+
+
+def attn_project_qkv(p: Dict[str, Any], x: jax.Array, src: jax.Array,
+                     cfg: ModelConfig, positions: Optional[jax.Array],
+                     src_positions: Optional[jax.Array],
+                     shard: Shard) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"].astype(x.dtype))
+    q = shard(q, "batch", "seq", "heads", "head_dim")
+    if k.shape[1] > 1:  # decode's single fresh token stays replicated
+        k = shard(k, "batch", "att_kv_seq", "kv_heads", "head_dim")
+        v = shard(v, "batch", "att_kv_seq", "kv_heads", "head_dim")
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+    if src_positions is not None:
+        k = rope(k, src_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_output(p: Dict[str, Any], ctx: jax.Array, x_dtype) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", ctx, p["wo"].astype(x_dtype))
+
+
+# -------------------------------------------------------------------- mlps
+def dense_mlp(p: Dict[str, Any], x: jax.Array, shard: Shard) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"].astype(x.dtype))
+    h = shard(jax.nn.silu(h) * u, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"].astype(x.dtype))
+
+
+def moe_mlp(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+            shard: Shard) -> Tuple[jax.Array, jax.Array]:
+    """Sort-based token-choice top-k MoE (drop-on-capacity, per sequence).
+
+    Avoids (B,S,E,C) one-hot dispatch tensors: tokens are replicated k times,
+    sorted by expert id, packed into (B, E, C, D) buffers, run through batched
+    expert matmuls (E sharded over the 'model'/EP axis), then unsorted.
+    Returns (output, load_balancing_aux_loss).
+    """
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = m.num_experts, m.top_k
+    C = max(1, int(math.ceil(S * K * m.capacity_factor / E)))
+    C = min(C, S * K)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, K)          # (B,S,K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # load-balance aux (Switch-style): E * sum_e f_e * p_e
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_ids, E, dtype=jnp.float32), axis=(1, 2))
+    aux = E * jnp.mean(jnp.sum(dispatch_frac * jnp.mean(probs, 1), -1))
+
+    ids = top_ids.reshape(B, S * K)
+    w = top_w.reshape(B, S * K)
+    order = jnp.argsort(ids, axis=-1, stable=True)    # (B, S*K)
+    sids = jnp.take_along_axis(ids, order, 1)
+    sw = jnp.take_along_axis(w, order, 1)
+    tok = order // K                                  # source token index
+    seg_start = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(sids)
+    pos_in_e = jnp.arange(S * K)[None] - jnp.take_along_axis(seg_start, sids, 1)
+    keep = (pos_in_e < C)
+    slot = sids * C + jnp.minimum(pos_in_e, C - 1)    # (B, S*K)
+
+    xg = jnp.take_along_axis(x, tok[..., None], axis=1)          # (B,S*K,D)
+    keepf = keep.astype(x.dtype)[..., None]
+
+    def scatter_row(xr, sr, kr):
+        return jnp.zeros((E * C, D), x.dtype).at[sr].add(xr * kr)
+
+    buf = jax.vmap(scatter_row)(xg, slot, keepf).reshape(B, E, C, D)
+    buf = shard(buf, "batch", "expert", None, None)
+    h = jnp.einsum("becd,edf->becf", buf, p["wg"].astype(x.dtype))
+    u = jnp.einsum("becd,edf->becf", buf, p["wu"].astype(x.dtype))
+    act = shard(jax.nn.silu(h) * u, "batch", "expert", None, "mlp")
+    y = jnp.einsum("becf,efd->becd", act, p["wd"].astype(x.dtype))
+    y = shard(y, "batch", "expert", None, None).reshape(B, E * C, D)
+
+    yg = jnp.take_along_axis(y, slot[..., None], axis=1)         # (B,S*K,D)
+    yg = yg * keepf * sw.astype(x.dtype)[..., None]
+
+    def gather_back(yr, tr):
+        return jnp.zeros((S, D), x.dtype).at[tr].add(yr)
+
+    out = jax.vmap(gather_back)(yg, tok)
+    return shard(out, "batch", "seq", "embed"), aux
+
+
+def mlp(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig,
+        shard: Shard) -> Tuple[jax.Array, jax.Array]:
+    if not p:  # no-op stand-in (e.g. whisper blocks reuse attn plumbing)
+        return jnp.zeros_like(x), jnp.zeros((), jnp.float32)
+    if cfg.moe is not None and "router" in p:
+        return moe_mlp(p, x, cfg, shard)
+    return dense_mlp(p, x, shard), jnp.zeros((), jnp.float32)
+
+
+# ------------------------------------------------------- causal conv (SSM)
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,C), w: (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):  # K is tiny (4); unrolled adds, no conv primitive needed
+        out = out + pad[:, i:i + x.shape[1]].astype(jnp.float32) * \
+            w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def causal_conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+                       b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. x_t: (B,C); conv_state: (B,K-1,C)."""
+    K = w.shape[0]
+    full = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return y.astype(x_t.dtype), full[:, 1:]
+
+
+# ------------------------------------------------------------- Mamba-2 SSD
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[i,j] = sum_{k in (j, i]} x[k], -inf i<j."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(xh: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, chunk: int,
+             init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked state-space-duality scan (Mamba-2, arXiv:2405.21060 listing 1).
+
+    xh: (B,S,H,P) dt: (B,S,H) A: (H,)<0  Bm,Cm: (B,S,N) (one group).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    assert nc * chunk == S, (S, chunk)
+    x_ = (xh * dt[..., None]).reshape(Bsz, nc, chunk, H, P)
+    dA = (dt * A).reshape(Bsz, nc, chunk, H)                      # (b,z,q,h)
+    dA_cs = jnp.cumsum(dA, axis=2)
+    Bc = Bm.reshape(Bsz, nc, chunk, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, N)
+
+    # (1) within-chunk ("diagonal block") — attention-like, fp32 accumulation
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))                # (b,z,h,q,k)
+    scores = jnp.einsum("bzqn,bzkn->bzqk", Cc.astype(jnp.float32),
+                        Bc.astype(jnp.float32))
+    y_diag = jnp.einsum("bzhqk,bzqk,bzkhp->bzqhp", L, scores,
+                        x_.astype(jnp.float32))
+
+    # (2) per-chunk outgoing states
+    decay_out = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)              # (b,z,q,h)
+    states = jnp.einsum("bzkn,bzkh,bzkhp->bzhpn", Bc.astype(jnp.float32),
+                        decay_out, x_.astype(jnp.float32))
+
+    # (3) inter-chunk recurrence (scan over chunks)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                     # (b,z,h)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                             # (b,h,p,n),(b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                         # emit state *before* chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                      # (b,z,h,p,n)
+
+    # (4) within-chunk contribution of the incoming state
+    decay_in = jnp.exp(dA_cs)                                     # (b,z,q,h)
+    y_off = jnp.einsum("bzqn,bzqh,bzhpn->bzqhp", Cc.astype(jnp.float32),
+                       decay_in, prev_states)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P).astype(xh.dtype)
+    return y, final.astype(jnp.float32)
+
+
+def ssd_step(x_t: jax.Array, dt: jax.Array, A: jax.Array, B_t: jax.Array,
+             C_t: jax.Array, state: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step. x_t: (B,H,P) dt: (B,H) B_t,C_t: (B,N) state: (B,H,P,N)."""
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x_t.astype(jnp.float32),
+                     B_t.astype(jnp.float32))
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), state
+
+
+# ------------------------------------------------------------------ RG-LRU
+def rglru_scan(u: jax.Array, r: jax.Array, i: jax.Array, lam: jax.Array,
+               power: float, init_h: Optional[jax.Array] = None
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Griffin RG-LRU over a sequence via associative scan.
+
+    u,r,i: (B,S,W); lam: (W,). h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t*u_t),
+    a_t = exp(-power * softplus(lam) * r_t).
+    Returns (h (B,S,W), final_h (B,W)).
+    """
+    log_a = -power * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        r.astype(jnp.float32)                                     # (B,S,W)
+    a = jnp.exp(log_a)
+    gated = (i * u).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * gated
+    if init_h is not None:
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        b = jnp.concatenate([init_h.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_h is not None:
+        hh = hh[:, 1:]
+    return hh.astype(u.dtype), hh[:, -1]
+
+
+def rglru_step(u_t: jax.Array, r_t: jax.Array, i_t: jax.Array, lam: jax.Array,
+               power: float, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step; u_t,r_t,i_t: (B,W); h: (B,W) fp32."""
+    log_a = -power * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        r_t.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) * \
+        (i_t * u_t).astype(jnp.float32)
+    h = a * h + b
+    return h.astype(u_t.dtype), h

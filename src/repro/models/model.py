@@ -1,0 +1,348 @@
+"""Model assembly: stage scanning, train/prefill/decode entry points, caches.
+
+All stacks lower through ``lax.scan`` over super-blocks (config.find_stages),
+so the HLO size is independent of depth — a 100-layer model compiles as fast
+as a 2-layer one, which is what makes the 80-compile dry-run tractable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import blocks
+from .config import ModelConfig, Stage, find_stages
+from .layers import (Shard, gqa_attention, identity_shard, mlp, rms_norm)
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------- embedding
+def embed_tokens(params: Pytree, tokens: jax.Array, cfg: ModelConfig,
+                 shard: Shard) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x.astype(cfg.compute_dtype), "batch", "seq", "embed")
+
+
+def unembed(params: Pytree, x: jax.Array, cfg: ModelConfig,
+            shard: Shard) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))
+    if cfg.vocab_padded != cfg.vocab:  # mask TP-padding rows out of the lse
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def sinusoid_positions(T: int, D: int) -> jax.Array:
+    half = D // 2
+    freqs = jnp.exp(-math.log(10_000.0) *
+                    jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(T, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)[:, :D]
+
+
+# ------------------------------------------------------------------ encoder
+def encoder_forward(params: Pytree, frames: jax.Array, cfg: ModelConfig,
+                    shard: Shard) -> jax.Array:
+    """Whisper-style bidirectional encoder over (stubbed) frame embeddings."""
+    e = cfg.encoder
+    enc = params["encoder"]
+    x = frames.astype(cfg.compute_dtype)
+    x = x + sinusoid_positions(x.shape[1], cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "enc_seq", "embed")
+    B, T, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(xc, p):
+        h = rms_norm(xc, p["ln"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, p["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, p["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, p["wv"].astype(h.dtype))
+        ctxv = gqa_attention(q, k, v, q_positions=pos, k_positions=pos,
+                             causal=False, window=None, q_chunk=cfg.q_chunk,
+                         scores_dtype=cfg.scores_dtype, shard=shard)
+        xc = xc + jnp.einsum("bshk,hkd->bsd", ctxv, p["wo"].astype(h.dtype))
+        y, _ = mlp(p["mlp"], rms_norm(xc, p["ln2"], cfg.norm_eps), cfg, shard)
+        return xc + y, ()
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, enc["blocks"])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- stages
+def _make_ctx_train(cfg: ModelConfig, params: Pytree, batch: Dict[str, Any],
+                    shard: Shard, S: int, B: int) -> Dict[str, Any]:
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    ctx: Dict[str, Any] = {"positions": pos, "s_max": S}
+    if cfg.encoder is not None:
+        ctx["enc_out"] = encoder_forward(params, batch["enc_frames"], cfg, shard)
+    if cfg.vision is not None:
+        ctx["img_embeds"] = batch["img_embeds"].astype(cfg.compute_dtype)
+    return ctx
+
+
+def _remat2_group(repeat: int) -> int:
+    """Largest divisor of `repeat` not exceeding sqrt(repeat)."""
+    g = int(math.isqrt(repeat))
+    while g > 1 and repeat % g:
+        g -= 1
+    return max(g, 1)
+
+
+def run_stages_train(params: Pytree, x: jax.Array, ctx: Dict[str, Any],
+                     cfg: ModelConfig, shard: Shard
+                     ) -> Tuple[jax.Array, jax.Array]:
+    stages = find_stages(cfg.layer_pattern)
+    aux_total = jnp.zeros((), jnp.float32)
+    for si, st in enumerate(stages):
+        sp = params["stages"][si]
+
+        def body(xc, lp, _st=st):
+            aux = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(_st.block):
+                xc, a = blocks.TRAIN[kind](kind, lp["blocks"][j], xc, ctx,
+                                           cfg, shard)
+                aux = aux + a
+            return xc, aux
+
+        g = _remat2_group(st.repeat) if (cfg.remat2 and cfg.remat) else 1
+        if g > 1:
+            # remat^2: outer scan saves G=repeat/g carries; each group of g
+            # layers is one rematerialized unit (see ModelConfig.remat2).
+            sp2 = jax.tree.map(
+                lambda a: a.reshape((st.repeat // g, g) + a.shape[1:]), sp)
+
+            def group(xc, gp):
+                xc, auxs = jax.lax.scan(body, xc, gp)
+                return xc, jnp.sum(auxs)
+
+            x, auxs = jax.lax.scan(jax.checkpoint(group), x, sp2)
+        else:
+            body_fn = jax.checkpoint(body) if cfg.remat else body
+            x, auxs = jax.lax.scan(body_fn, x, sp)
+        aux_total = aux_total + jnp.sum(auxs)
+    return x, aux_total
+
+
+def run_stages_prefill(params: Pytree, x: jax.Array, ctx: Dict[str, Any],
+                       cfg: ModelConfig, shard: Shard
+                       ) -> Tuple[jax.Array, List[Pytree]]:
+    stages = find_stages(cfg.layer_pattern)
+    cache_stages: List[Pytree] = []
+    for si, st in enumerate(stages):
+        sp = params["stages"][si]
+
+        def body(xc, lp, _st=st):
+            caches = []
+            for j, kind in enumerate(_st.block):
+                xc, c, _ = blocks.PREFILL[kind](kind, lp["blocks"][j], xc, ctx,
+                                                cfg, shard)
+                caches.append(c)
+            return xc, {"blocks": caches}
+
+        x, cache = jax.lax.scan(body, x, sp)
+        cache_stages.append(cache)
+    return x, cache_stages
+
+
+def run_stages_decode(params: Pytree, cache_stages: List[Pytree],
+                      x: jax.Array, ctx: Dict[str, Any], cfg: ModelConfig,
+                      shard: Shard) -> Tuple[jax.Array, List[Pytree]]:
+    """Decode scans layers with the cache as a fori_loop *carry* (not scan
+    xs/ys): XLA updates the carried buffers in place, so decode peak memory
+    is one cache (+1 layer temp) instead of input-cache + stacked-ys-cache
+    (2x) — see EXPERIMENTS.md §Perf iteration log."""
+    stages = find_stages(cfg.layer_pattern)
+    new_stages: List[Pytree] = []
+    for si, st in enumerate(stages):
+        sp = params["stages"][si]
+
+        def body(i, carry, _st=st, _sp=sp):
+            xc, cache = carry
+            take = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                          keepdims=False)
+            lp = jax.tree.map(take, _sp)
+            lc = jax.tree.map(take, cache)
+            new_blocks = []
+            for j, kind in enumerate(_st.block):
+                xc, c = blocks.DECODE[kind](kind, lp["blocks"][j],
+                                            lc["blocks"][j], xc, ctx, cfg,
+                                            shard)
+                new_blocks.append(c)
+            put = lambda buf, upd: jax.lax.dynamic_update_index_in_dim(
+                buf, upd.astype(buf.dtype), i, 0)
+            cache = jax.tree.map(put, cache, {"blocks": new_blocks})
+            return (xc, cache)
+
+        x, new_cache = jax.lax.fori_loop(0, st.repeat, body,
+                                         (x, cache_stages[si]))
+        new_stages.append(new_cache)
+    return x, new_stages
+
+
+# --------------------------------------------------------------------- loss
+def _nll_of_chunk(params: Pytree, xc: jax.Array, lc: jax.Array,
+                  mc: jax.Array, cfg: ModelConfig, shard: Shard):
+    logits = unembed(params, xc, cfg, shard).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lc[..., None].astype(jnp.int32),
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    return (jnp.sum(nll * mc), jnp.sum((lse ** 2) * mc))
+
+
+def loss_fn(params: Pytree, batch: Dict[str, Any], cfg: ModelConfig,
+            shard: Shard = identity_shard,
+            aux_coef: float = 0.01, z_coef: float = 1e-4
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg, shard)
+    ctx = _make_ctx_train(cfg, params, batch, shard, S, B)
+    x, aux = run_stages_train(params, x, ctx, cfg, shard)
+    mask = batch.get("loss_mask",
+                     jnp.ones((B, S), jnp.float32)).astype(jnp.float32)
+    ntok = jnp.maximum(jnp.sum(mask), 1.0)
+    # Vocab-chunked loss: (B, S, V) fp32 logits never materialize for the
+    # whole sequence at once (memory lever for the 128k-262k vocab configs).
+    C = cfg.loss_chunk
+    if S > C and S % C == 0:
+        nc = S // C
+        xs = x.reshape(B, nc, C, -1).swapaxes(0, 1)
+        ls = labels.reshape(B, nc, C).swapaxes(0, 1)
+        ms = mask.reshape(B, nc, C).swapaxes(0, 1)
+        fn = jax.checkpoint(
+            lambda args: _nll_of_chunk(params, *args, cfg, shard))
+        nlls, zs = jax.lax.map(fn, (xs, ls, ms))
+        nll_sum, z_sum = jnp.sum(nlls), jnp.sum(zs)
+    else:
+        nll_sum, z_sum = _nll_of_chunk(params, x, labels, mask, cfg, shard)
+    ce = nll_sum / ntok
+    zloss = z_sum / ntok
+    loss = ce + aux_coef * aux + z_coef * zloss
+    return loss, {"ce": ce, "aux": aux, "zloss": zloss, "ntokens": ntok}
+
+
+# ------------------------------------------------------------------ serving
+def prefill(params: Pytree, batch: Dict[str, Any], cfg: ModelConfig,
+            s_max: int, shard: Shard = identity_shard
+            ) -> Tuple[jax.Array, Pytree]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed_tokens(params, tokens, cfg, shard)
+    ctx = _make_ctx_train(cfg, params, batch, shard, S, B)
+    ctx["s_max"] = s_max
+    x, cache_stages = run_stages_prefill(params, x, ctx, cfg, shard)
+    logits = unembed(params, x[:, -1:], cfg, shard)[:, 0]
+    return logits, {"stages": cache_stages, "pos": jnp.asarray(S, jnp.int32)}
+
+
+def decode_step(params: Pytree, tokens: jax.Array, cache: Pytree,
+                cfg: ModelConfig, shard: Shard = identity_shard
+                ) -> Tuple[jax.Array, Pytree]:
+    """tokens: (B, 1). cache['pos'] is the write position of this token."""
+    pos = cache["pos"]
+    x = embed_tokens(params, tokens, cfg, shard)
+    ctx = {"pos": pos, "s_max": 0}
+    x, new_stages = run_stages_decode(params, cache["stages"], x, ctx, cfg,
+                                      shard)
+    logits = unembed(params, x, cfg, shard)[:, 0]
+    return logits, {"stages": new_stages, "pos": pos + 1}
+
+
+# ------------------------------------------------------------------- caches
+@dataclasses.dataclass(frozen=True)
+class CacheSpec:
+    shape: Tuple[int, ...]
+    dtype: Any
+    logical: Tuple[Optional[str], ...]
+
+
+def _block_cache_spec(cfg: ModelConfig, kind: str, B: int, s_max: int
+                      ) -> Dict[str, CacheSpec]:
+    cd = jnp.dtype(cfg.compute_dtype)
+    KH, dh = cfg.n_kv, cfg.d_head
+    kv_logical = ("batch", "kv_seq", "kv_heads", "head_dim")
+    if kind == "attn":
+        sc = s_max
+        return {"k": CacheSpec((B, sc, KH, dh), cd, kv_logical),
+                "v": CacheSpec((B, sc, KH, dh), cd, kv_logical)}
+    if kind == "lattn":
+        sc = min(cfg.window, s_max)
+        return {"k": CacheSpec((B, sc, KH, dh), cd, kv_logical),
+                "v": CacheSpec((B, sc, KH, dh), cd, kv_logical)}
+    if kind == "xattn":
+        T = cfg.vision.n_img_tokens
+        lg = ("batch", "enc_seq", "kv_heads", "head_dim")
+        return {"k": CacheSpec((B, T, KH, dh), cd, lg),
+                "v": CacheSpec((B, T, KH, dh), cd, lg)}
+    if kind == "wdec":
+        T = cfg.encoder.seq_len
+        lg = ("batch", "enc_seq", "kv_heads", "head_dim")
+        return {"k": CacheSpec((B, s_max, KH, dh), cd, kv_logical),
+                "v": CacheSpec((B, s_max, KH, dh), cd, kv_logical),
+                "xk": CacheSpec((B, T, KH, dh), cd, lg),
+                "xv": CacheSpec((B, T, KH, dh), cd, lg)}
+    if kind == "ssd":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        conv_dim = d_inner + 2 * s.d_state
+        return {"state": CacheSpec((B, H, s.head_dim, s.d_state), jnp.float32,
+                                   ("batch", "ssm_heads", "head_dim",
+                                    "ssm_state")),
+                "conv": CacheSpec((B, s.conv_width - 1, conv_dim), cd,
+                                  ("batch", None, "ssm_inner"))}
+    if kind == "rglru":
+        W = cfg.rglru.width or cfg.d_model
+        return {"h": CacheSpec((B, W), jnp.float32, ("batch", "rec")),
+                "conv": CacheSpec((B, cfg.rglru.conv_width - 1, W), cd,
+                                  ("batch", None, "rec"))}
+    raise ValueError(kind)
+
+
+def cache_table(cfg: ModelConfig, B: int, s_max: int) -> Pytree:
+    stages = find_stages(cfg.layer_pattern)
+    out: List[Pytree] = []
+    for st in stages:
+        blocks_specs = []
+        for kind in st.block:
+            spec = _block_cache_spec(cfg, kind, B, s_max)
+            spec = {k: CacheSpec((st.repeat,) + v.shape, v.dtype,
+                                 ("layers",) + v.logical)
+                    for k, v in spec.items()}
+            blocks_specs.append(spec)
+        out.append({"blocks": blocks_specs})
+    return {"stages": out,
+            "pos": CacheSpec((), jnp.int32, ())}
+
+
+def _is_cache_spec(x):
+    return isinstance(x, CacheSpec)
+
+
+def init_cache(cfg: ModelConfig, B: int, s_max: int) -> Pytree:
+    t = cache_table(cfg, B, s_max)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), t,
+                        is_leaf=_is_cache_spec)
+
+
+def abstract_cache(cfg: ModelConfig, B: int, s_max: int,
+                   pos: Optional[int] = None) -> Pytree:
+    t = cache_table(cfg, B, s_max)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), t,
+                        is_leaf=_is_cache_spec)
+
+
+def cache_logical_specs(cfg: ModelConfig, B: int, s_max: int) -> Pytree:
+    t = cache_table(cfg, B, s_max)
+    return jax.tree.map(lambda s: s.logical, t, is_leaf=_is_cache_spec)

@@ -1,0 +1,248 @@
+"""Declarative parameter tables for all architecture families.
+
+Every parameter is described once by a ParamSpec (shape, logical axes, init);
+``init_params``, ``abstract_params``, ``logical_specs`` and ``count_params``
+all derive from the same table, so shapes, shardings and roofline parameter
+counts cannot drift apart.
+
+Logical axis names (mapped to mesh axes by repro.launch.sharding rules):
+  vocab, embed, mlp, heads, kv_heads, head_dim, expert, ssm_inner, ssm_heads,
+  rec, conv_w, norm, layers (the scan/stack dimension)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig, Stage, find_stages
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"        # normal | zeros | ones | output (scaled 1/sqrt(2L))
+    fan_in_axes: Tuple[int, ...] = (0,)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+# --------------------------------------------------------------------- table
+def _mlp_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    D, F = cfg.d_model, cfg.d_ff
+    if cfg.moe is not None:
+        E = cfg.moe.num_experts
+        return {
+            "router": ParamSpec((D, E), ("embed", "expert")),
+            "wg": ParamSpec((E, D, F), ("expert", "embed", "mlp"), fan_in_axes=(1,)),
+            "wu": ParamSpec((E, D, F), ("expert", "embed", "mlp"), fan_in_axes=(1,)),
+            "wd": ParamSpec((E, F, D), ("expert", "mlp", "embed"), "output",
+                            fan_in_axes=(1,)),
+        }
+    return {
+        "wg": ParamSpec((D, F), ("embed", "mlp")),
+        "wu": ParamSpec((D, F), ("embed", "mlp")),
+        "wd": ParamSpec((F, D), ("mlp", "embed"), "output"),
+    }
+
+
+def _attn_core_specs(cfg: ModelConfig, src_dim: Optional[int] = None
+                     ) -> Dict[str, Any]:
+    D, H, KH, dh = cfg.d_model, cfg.n_q, cfg.n_kv, cfg.d_head
+    S = src_dim or D
+    out: Dict[str, Any] = {
+        "wq": ParamSpec((D, H, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((S, KH, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((S, KH, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, dh, D), ("heads", "head_dim", "embed"), "output",
+                        fan_in_axes=(0, 1)),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamSpec((dh,), ("norm",), "ones")
+        out["k_norm"] = ParamSpec((dh,), ("norm",), "ones")
+    return out
+
+
+def _block_specs(cfg: ModelConfig, kind: str) -> Dict[str, Any]:
+    D = cfg.d_model
+    ln = lambda: ParamSpec((D,), ("norm",), "ones")
+    if kind in ("attn", "lattn"):
+        return {"ln": ln(), **_attn_core_specs(cfg), "ln2": ln(),
+                "mlp": _mlp_specs(cfg)}
+    if kind == "xattn":
+        return {"ln": ln(), **_attn_core_specs(cfg),
+                "xgate": ParamSpec((1,), ("norm",), "zeros"),
+                "ln2": ln(), "mlp": _mlp_specs(cfg),
+                "mgate": ParamSpec((1,), ("norm",), "zeros")}
+    if kind == "wdec":  # whisper decoder block: self-attn + cross-attn + mlp
+        return {"ln": ln(), **_attn_core_specs(cfg),
+                "ln_x": ln(),
+                "x": _attn_core_specs(cfg),
+                "ln2": ln(), "mlp": _mlp_specs(cfg)}
+    if kind == "ssd":
+        s = cfg.ssm
+        d_inner = s.expand * D
+        H = d_inner // s.head_dim
+        conv_dim = d_inner + 2 * s.d_state
+        d_in_proj = 2 * d_inner + 2 * s.d_state + H
+        out = {
+            "ln": ln(),
+            "in_proj": ParamSpec((D, d_in_proj), ("embed", "ssm_inner")),
+            "conv_w": ParamSpec((s.conv_width, conv_dim), ("conv_w", "ssm_inner"),
+                                fan_in_axes=(0,)),
+            "conv_b": ParamSpec((conv_dim,), ("ssm_inner",), "zeros"),
+            "A_log": ParamSpec((H,), ("ssm_heads",), "ones"),
+            "D": ParamSpec((H,), ("ssm_heads",), "ones"),
+            "dt_bias": ParamSpec((H,), ("ssm_heads",), "zeros"),
+            "norm": ParamSpec((d_inner,), ("ssm_inner",), "ones"),
+            "out_proj": ParamSpec((d_inner, D), ("ssm_inner", "embed"), "output"),
+        }
+        if cfg.d_ff > 0:
+            out["ln2"] = ln()
+            out["mlp"] = _mlp_specs(cfg)
+        return out
+    if kind == "rglru":
+        r = cfg.rglru
+        W = r.width or D
+        nb = r.gate_blocks
+        if nb:
+            assert W % nb == 0, (W, nb)
+            gate = lambda: ParamSpec((nb, W // nb, W // nb),
+                                     ("rec_blocks", "rec_blk_in",
+                                      "rec_blk_out"), fan_in_axes=(1,))
+        else:
+            gate = lambda: ParamSpec((W, W), ("rec_in", "rec"))
+        return {
+            "ln": ln(),
+            "wx": ParamSpec((D, W), ("embed", "rec")),       # recurrent branch
+            "wy": ParamSpec((D, W), ("embed", "rec")),       # gate branch (GeLU)
+            "conv_w": ParamSpec((r.conv_width, W), ("conv_w", "rec"),
+                                fan_in_axes=(0,)),
+            "conv_b": ParamSpec((W,), ("rec",), "zeros"),
+            "wa_gate": gate(),                               # recurrence gate
+            "ba_gate": ParamSpec((W,), ("rec",), "zeros"),
+            "wi_gate": gate(),                               # input gate
+            "bi_gate": ParamSpec((W,), ("rec",), "zeros"),
+            "Lambda": ParamSpec((W,), ("rec",), "ones"),
+            "wout": ParamSpec((W, D), ("rec", "embed"), "output"),
+            "ln2": ln(),
+            "mlp": _mlp_specs(cfg),
+        }
+    raise ValueError(f"unknown layer kind {kind!r}")
+
+
+def _encoder_block_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    e = cfg.encoder
+    D = cfg.d_model
+    dh = D // e.n_heads
+    ln = lambda: ParamSpec((D,), ("norm",), "ones")
+    return {
+        "ln": ln(),
+        "wq": ParamSpec((D, e.n_heads, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, e.n_heads, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((D, e.n_heads, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((e.n_heads, dh, D), ("heads", "head_dim", "embed"),
+                        "output", fan_in_axes=(0, 1)),
+        "ln2": ln(),
+        "mlp": {
+            "wg": ParamSpec((D, e.d_ff), ("embed", "mlp")),
+            "wu": ParamSpec((D, e.d_ff), ("embed", "mlp")),
+            "wd": ParamSpec((e.d_ff, D), ("mlp", "embed"), "output"),
+        },
+    }
+
+
+def param_table(cfg: ModelConfig) -> Dict[str, Any]:
+    """Full pytree of ParamSpec. Stage leaves carry a leading 'layers' axis."""
+    D = cfg.d_model
+    V = cfg.vocab_padded
+    table: Dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed")),
+        "final_norm": ParamSpec((D,), ("norm",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        table["lm_head"] = ParamSpec((D, V), ("embed", "vocab"))
+    stages = find_stages(cfg.layer_pattern)
+    table["stages"] = []
+    for st in stages:
+        blocks = [_stack_specs(_block_specs(cfg, k), st.repeat) for k in st.block]
+        table["stages"].append({"blocks": blocks})
+    if cfg.encoder is not None:
+        e = cfg.encoder
+        table["encoder"] = {
+            "blocks": _stack_specs(_encoder_block_specs(cfg), e.n_layers),
+            "final_norm": ParamSpec((D,), ("norm",), "ones"),
+        }
+    return table
+
+
+def _stack_specs(tree: Pytree, repeat: int) -> Pytree:
+    def stack(spec: ParamSpec) -> ParamSpec:
+        return ParamSpec((repeat,) + spec.shape, ("layers",) + spec.logical,
+                         spec.init,
+                         tuple(a + 1 for a in spec.fan_in_axes))
+    return jax.tree.map(stack, tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ------------------------------------------------------------ materializers
+def _init_one(spec: ParamSpec, key: jax.Array, dtype, n_layers_total: int
+              ) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = 1
+    for a in spec.fan_in_axes:
+        fan_in *= spec.shape[a]
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    if spec.init == "output":  # residual-output scaling
+        scale /= math.sqrt(2.0 * max(n_layers_total, 1))
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Pytree:
+    table = param_table(cfg)
+    leaves, treedef = jax.tree.flatten(
+        table, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    dtype = jnp.dtype(cfg.param_dtype)
+    vals = [_init_one(s, k, dtype, cfg.n_layers) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ModelConfig) -> Pytree:
+    """ShapeDtypeStruct pytree — used by the dry-run (no allocation)."""
+    table = param_table(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), table,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def logical_specs(cfg: ModelConfig) -> Pytree:
+    table = param_table(cfg)
+    return jax.tree.map(lambda s: s.logical, table,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
+    """Analytic count; with active_only, MoE experts count top_k/E of weights
+    (for MODEL_FLOPS = 6 * N_active * D)."""
+    table = param_table(cfg)
+    total = 0
+    for path, spec in jax.tree.flatten_with_path(
+            table, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
+        n = int(np.prod(spec.shape))
+        names = [getattr(p, "key", getattr(p, "idx", "")) for p in path]
+        if active_only and cfg.moe and "mlp" in names and "expert" in spec.logical:
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        total += n
+    return total

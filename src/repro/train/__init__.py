@@ -1,0 +1,4 @@
+from .optimizer import OptConfig, adamw_update, init_opt_state, schedule_lr
+from .step import make_eval_step, make_train_step
+from .compress import (compress_with_feedback, compressed_grad_allreduce,
+                       dequantize, init_error_state, quantize)

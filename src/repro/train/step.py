@@ -1,0 +1,76 @@
+"""Train step: loss -> grads -> AdamW, with microbatch gradient accumulation.
+
+Microbatching (`accum_steps > 1`) scans over batch slices, accumulating fp32
+gradients — this is the main activation-memory lever for the big assigned
+configs (mixtral-8x22b, llama-3.2-vision-90b) and composes with per-block
+remat (ModelConfig.remat).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import Shard, identity_shard
+from .optimizer import OptConfig, adamw_update, init_opt_state
+
+Pytree = Any
+
+
+def _split_batch(batch: Dict[str, jax.Array], accum: int
+                 ) -> Dict[str, jax.Array]:
+    def re(x):
+        B = x.shape[0]
+        assert B % accum == 0, (B, accum)
+        return x.reshape(accum, B // accum, *x.shape[1:])
+    return {k: re(v) for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    shard: Shard = identity_shard, accum_steps: int = 1
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_of(p, mb):
+        return M.loss_fn(p, mb, cfg, shard)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params: Pytree, opt_state: Pytree,
+                   batch: Dict[str, jax.Array]):
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_batch(batch, accum_steps)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, met), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), met
+
+            (grads, loss_sum), mets = jax.lax.scan(
+                body, (zero, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = jax.tree.map(lambda x: x[-1], mets)
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, shard: Shard = identity_shard):
+    def eval_step(params, batch):
+        loss, metrics = M.loss_fn(params, batch, cfg, shard)
+        return dict(metrics, loss=loss)
+    return eval_step

@@ -1,0 +1,81 @@
+"""Bloom filter + Monkey/Autumn allocation (paper Eq. 2, 7-10)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BloomFilter, allocate_fprs, bits_for_fpr,
+                        garnering_theoretical_fprs, theoretical_fpr,
+                        zero_result_read_cost)
+
+
+def test_no_false_negatives():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**63, 5000, dtype=np.uint64)
+    bf = BloomFilter(keys, bits_per_key=10)
+    assert bf.may_contain(keys).all()
+
+
+def test_fpr_matches_eq2():
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 2**62, 20_000, dtype=np.uint64)
+    bf = BloomFilter(keys, bits_per_key=10)
+    absent = rng.integers(2**62, 2**63, 50_000, dtype=np.uint64)
+    fpr = float(np.mean(bf.may_contain(absent)))
+    expected = theoretical_fpr(10)  # ~0.0082 (paper: 10 bits => ~1%)
+    assert fpr < 3 * expected and fpr > expected / 5
+
+
+def test_zero_bits_always_maybe():
+    keys = np.arange(10, dtype=np.uint64)
+    bf = BloomFilter(keys, bits_per_key=0)
+    assert bf.may_contain(np.arange(100, dtype=np.uint64)).all()
+
+
+@given(st.lists(st.integers(min_value=0, max_value=10**7), min_size=1,
+                max_size=8),
+       st.floats(min_value=1.0, max_value=16.0))
+@settings(max_examples=60, deadline=None)
+def test_monkey_allocation_budget_and_kkt(sizes, bits_per_key):
+    """Water-filling invariants: (a) budget is respected, (b) interior FPRs
+    are proportional to level sizes (KKT), (c) all FPRs in (0, 1]."""
+    total = sum(sizes)
+    if total == 0:
+        return
+    budget = bits_per_key * total
+    fprs = allocate_fprs(sizes, budget)
+    assert ((fprs > 0) & (fprs <= 1.0 + 1e-12)).all()
+    spent = sum(-n * math.log(p) / math.log(2) ** 2
+                for n, p in zip(sizes, fprs) if n > 0)
+    assert spent <= budget * 1.001
+    interior = [(n, p) for n, p in zip(sizes, fprs) if n > 0 and p < 0.999]
+    for (n1, p1), (n2, p2) in zip(interior, interior[1:]):
+        assert p1 * n2 == pytest.approx(p2 * n1, rel=1e-6)
+
+
+def test_eq9_closed_form_matches_waterfilling():
+    """Optimal FPRs on Garnering capacities reproduce Eq. 9's shape."""
+    T, c, L, B = 2.0, 0.8, 6, 1000
+    sizes = [int(B * T ** i / c ** ((2 * L - 1 - i) * i / 2))
+             for i in range(1, L + 1)]
+    fprs = allocate_fprs(sizes, 8.0 * sum(sizes))
+    theory = garnering_theoretical_fprs(L, T, c, p_last=fprs[-1])
+    interior = [i for i in range(L) if fprs[i] < 0.999]
+    for i in interior:
+        assert fprs[i] == pytest.approx(theory[i], rel=0.05)
+
+
+def test_read_cost_converges_faster_than_geometric():
+    """Paper §3.1: R = sum p_i converges to O(p_L) because numerators carry
+    c^{i(i-1)/2}."""
+    for L in (4, 8, 16):
+        fprs = garnering_theoretical_fprs(L, T=2.0, c=0.8, p_last=0.01)
+        r = zero_result_read_cost(fprs)
+        geo = 0.01 * sum(0.5 ** i for i in range(L))
+        assert r <= geo + 1e-12
+
+
+def test_bits_for_fpr_roundtrip():
+    for p in (0.5, 0.1, 0.01, 1.0):
+        assert theoretical_fpr(bits_for_fpr(p)) == pytest.approx(p, rel=1e-9)

@@ -1,0 +1,152 @@
+"""LSM engine behaviour: reads/writes/deletes, MVCC, recovery, invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LSMConfig, LSMStore
+
+
+def small_cfg(**kw):
+    base = dict(policy="garnering", T=2.0, c=0.8, memtable_bytes=1 << 12,
+                base_level_bytes=1 << 14, bits_per_key=10,
+                bloom_allocation="monkey")
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def test_put_get_delete_scan():
+    db = LSMStore(small_cfg())
+    for k in range(500):
+        db.put(k, f"v{k}".encode())
+    db.flush()
+    db.delete(123)
+    assert db.get(122) == b"v122"
+    assert db.get(123) is None
+    assert db.get(10_000) is None
+    got = db.scan(120, 5)
+    assert [k for k, _ in got] == [120, 121, 122, 124, 125]
+
+
+def test_overwrite_newest_wins():
+    db = LSMStore(small_cfg())
+    for rep in range(4):
+        for k in range(300):
+            db.put(k, f"r{rep}k{k}".encode())
+        db.flush()
+    assert db.get(7) == b"r3k7"
+    assert db.scan(7, 1) == [(7, b"r3k7")]
+
+
+def test_runs_internally_sorted_unique():
+    db = LSMStore(small_cfg())
+    rng = np.random.default_rng(0)
+    for k in rng.integers(0, 2000, 5000):
+        db.put(int(k), b"x" * 20)
+    db.flush()
+    for lvl in db._levels:
+        for run in lvl:
+            assert (np.diff(run.keys.astype(np.int64)) > 0).all()
+
+
+def test_mvcc_snapshot_isolation():
+    db = LSMStore(small_cfg())
+    for k in range(200):
+        db.put(k, b"old")
+    db.flush()
+    snap = db.get_snapshot()
+    for k in range(200):
+        db.put(k, b"new")
+    db.flush()
+    assert db.get(5) == b"new"
+    assert db.get(5, snapshot=snap) == b"old"
+    got = db.scan(0, 3, snapshot=snap)
+    assert [v for _, v in got] == [b"old"] * 3
+
+
+def test_crash_recovery_wal():
+    db = LSMStore(small_cfg(wal_fsync_every_write=True))
+    for k in range(50):
+        db.put(k, b"durable")
+    db.flush()
+    db.put(999, b"in-wal-only")
+    db.crash()
+    db.recover()
+    assert db.get(999) == b"in-wal-only"   # WAL was fsynced per write
+    assert db.get(10) == b"durable"
+
+
+def test_crash_loses_unsynced_tail():
+    db = LSMStore(small_cfg(wal_fsync_every_write=False))
+    for k in range(50):
+        db.put(k, b"durable")
+    db.flush()                       # flush fsyncs + truncates WAL
+    db.put(999, b"volatile")         # never fsynced
+    db.crash()
+    db.recover()
+    assert db.get(999) is None
+    assert db.get(10) == b"durable"
+
+
+def test_tombstones_gcd_at_last_level():
+    db = LSMStore(small_cfg())
+    for k in range(400):
+        db.put(k, b"x" * 30)
+    for k in range(400):
+        db.delete(k)
+    db.flush()
+    assert db.total_live_entries() == 0
+    # force a full merge into the deepest level: tombstones must drop
+    from repro.core import CompactionTask
+    deepest = db._deepest_nonempty()
+    for i in range(1, deepest):
+        if db._levels[i]:
+            db._apply(CompactionTask(i, deepest, True, "test-force"))
+    if db._levels[0]:
+        db._apply(CompactionTask(0, deepest, True, "test-force"))
+    total = sum(len(r) for lvl in db._levels[1:] for r in lvl)
+    assert total == 0
+    assert db.get(5) is None
+
+
+def test_write_stall_counter():
+    db = LSMStore(small_cfg(l0_stop_writes_trigger=2,
+                            l0_compaction_trigger=100))
+    for k in range(4000):
+        db.put(k, b"y" * 40)
+    assert db.stats.write_stalls > 0
+
+
+@given(st.lists(st.tuples(st.sampled_from(["put", "del", "get"]),
+                          st.integers(0, 120)), min_size=1, max_size=300))
+@settings(max_examples=40, deadline=None)
+def test_against_dict_oracle(ops):
+    """Property: the engine behaves exactly like a dict, across flushes."""
+    db = LSMStore(small_cfg(memtable_bytes=1 << 9))
+    oracle = {}
+    for i, (op, k) in enumerate(ops):
+        if op == "put":
+            v = f"{i}".encode()
+            db.put(k, v)
+            oracle[k] = v
+        elif op == "del":
+            db.delete(k)
+            oracle.pop(k, None)
+        else:
+            assert db.get(k) == oracle.get(k)
+    db.flush()
+    for k in range(121):
+        assert db.get(k) == oracle.get(k), k
+    got = db.scan(0, len(oracle) + 5)
+    assert got == sorted(oracle.items())
+
+
+def test_scan_crossing_tombstones_and_levels():
+    db = LSMStore(small_cfg(memtable_bytes=1 << 10))
+    for k in range(0, 1000, 2):
+        db.put(k, b"even")
+    db.flush()
+    for k in range(0, 1000, 4):
+        db.delete(k)
+    db.flush()
+    got = db.scan(0, 10)
+    assert [k for k, _ in got] == [2, 6, 10, 14, 18, 22, 26, 30, 34, 38]

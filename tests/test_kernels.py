@@ -1,0 +1,116 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import (bloom_probe, flash_attention, merge_runs_tiled,
+                           paged_attention)
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,m_words,k", [(512, 128, 5), (2048, 1024, 7),
+                                         (4096, 64, 3)])
+def test_bloom_probe_sweep(n, m_words, k):
+    rng = np.random.default_rng(n + k)
+    keys = rng.integers(0, 2**63, n, dtype=np.uint64)
+    lo, hi = ops.split_u64(keys)
+    bits = ref.bloom_build_ref(np.asarray(lo), np.asarray(hi), m_words, k)
+    got = np.asarray(bloom_probe(keys, jnp.asarray(bits), k))
+    exp = np.asarray(ref.bloom_probe_ref(lo, hi, jnp.asarray(bits), k))
+    assert (got == exp).all()
+    assert got.all()  # no false negatives on members
+
+
+def test_bloom_fpr_reasonable():
+    rng = np.random.default_rng(9)
+    keys = rng.integers(0, 2**62, 4096, dtype=np.uint64)
+    lo, hi = ops.split_u64(keys)
+    bits = ref.bloom_build_ref(np.asarray(lo), np.asarray(hi), 2048, 7)
+    absent = rng.integers(2**62, 2**63, 8192, dtype=np.uint64)
+    fpr = float(np.mean(np.asarray(bloom_probe(absent, jnp.asarray(bits), 7))))
+    assert fpr < 0.05
+
+
+@pytest.mark.parametrize("na,nb,tile", [(777, 1333, 256), (1, 5000, 128),
+                                        (256, 256, 256), (0, 100, 64),
+                                        (4096, 4096, 512)])
+def test_merge_sweep(na, nb, tile):
+    rng = np.random.default_rng(na + nb)
+    a = np.sort(rng.integers(0, 1 << 31, na, dtype=np.uint32))
+    b = np.sort(rng.integers(0, 1 << 31, nb, dtype=np.uint32))
+    mk, mp = merge_runs_tiled(a, b, tile=tile)
+    assert (mk == np.sort(np.concatenate([a, b]))).all()
+    # payload integrity: every source index appears exactly once
+    src_a = (mp >> 31) == 0
+    assert (np.sort(mp[src_a] & 0x7FFFFFFF) == np.arange(na)).all()
+    assert (np.sort(mp[~src_a] & 0x7FFFFFFF) == np.arange(nb)).all()
+    # payload/key pairing: key at output equals source key
+    back_a = mk[src_a]
+    assert (back_a == a[(mp[src_a] & 0x7FFFFFFF)]).all()
+
+
+def test_merge_matches_engine_merge():
+    """Ties the TPU kernel to the engine's compaction semantics."""
+    from repro.core import IOStats, build_run, merge_runs
+    rng = np.random.default_rng(3)
+    ka = np.sort(rng.choice(1 << 20, 900, replace=False)).astype(np.uint64)
+    kb = np.sort(rng.choice(1 << 20, 500, replace=False)).astype(np.uint64)
+    mk, _ = merge_runs_tiled(ka.astype(np.uint32), kb.astype(np.uint32))
+    ra = build_run(ka, np.arange(900, dtype=np.uint64),
+                   np.zeros(900, np.int32), np.zeros((900, 0), np.uint8))
+    rb = build_run(kb, np.arange(1000, 1500, dtype=np.uint64),
+                   np.zeros(500, np.int32), np.zeros((500, 0), np.uint8))
+    merged = merge_runs([ra, rb], 0.0, IOStats())
+    # engine dedups duplicate keys; kernel keeps both — compare on uniques
+    assert (np.unique(mk) == merged.keys.astype(np.uint32)).all()
+
+
+@pytest.mark.parametrize("B,H,KH,dh,page,P", [
+    (2, 4, 4, 16, 8, 3),     # MHA
+    (3, 8, 2, 32, 16, 4),    # GQA
+    (1, 16, 1, 64, 32, 2),   # MQA
+])
+def test_paged_attention_sweep(B, H, KH, dh, page, P):
+    rng = np.random.default_rng(B * H)
+    nphys = P * B + 2
+    q = jnp.asarray(rng.standard_normal((B, H, dh)), jnp.float32)
+    kp = jnp.asarray(rng.standard_normal((nphys, page, KH, dh)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((nphys, page, KH, dh)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, nphys, (B, P)), jnp.int32)
+    ln = jnp.asarray(rng.integers(1, P * page + 1, B), jnp.int32)
+    got = paged_attention(q, kp, vp, bt, ln)
+    exp = ref.paged_attention_ref(q, kp, vp, bt, ln)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+def test_flash_attention_sweep(dtype, causal, window):
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.standard_normal((2, 256, 4, 32)), dtype)
+    k = jnp.asarray(rng.standard_normal((2, 256, 2, 32)), dtype)
+    v = jnp.asarray(rng.standard_normal((2, 256, 2, 32)), dtype)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          bq=64, bk=64)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(exp, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_matches_model_attention():
+    """Kernel vs the model's XLA-fallback gqa_attention."""
+    from repro.models.layers import gqa_attention
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((2, 128, 8, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, 2, 16)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(128)[None], (2, 128))
+    xla = gqa_attention(q, k, v, q_positions=pos, k_positions=pos,
+                        causal=True, window=None)
+    pallas = flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    np.testing.assert_allclose(np.asarray(xla), np.asarray(pallas),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,142 @@
+"""Per-assigned-architecture smoke tests (REDUCED same-family configs):
+one train step (finite loss, shapes) + prefill/decode path equivalence.
+The FULL configs are exercised only via the dry-run, per the assignment.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.data import stub_frontend_inputs
+from repro.models import model as M
+from repro.models.params import count_params, init_params
+from repro.train import OptConfig, init_opt_state, make_train_step
+
+
+def _batch(cfg, B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    b = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+    b["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    b.update({k: jnp.asarray(v)
+              for k, v in stub_frontend_inputs(cfg, B).items()})
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, OptConfig(peak_lr=1e-3,
+                                                  warmup_steps=1,
+                                                  total_steps=10)))
+    batch = _batch(cfg, B=2, S=16)
+    new_params, new_opt, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # params actually moved
+    moved = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, new_params))
+    assert max(moved) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(S-1)) logits == prefill(S) logits — serve path exact.
+
+    Run in float32 compute so the two paths (batched matmuls vs single-token
+    matmuls) agree to numerical precision; S=17 so the S-1=16 prefix divides
+    the SSD chunk."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke(arch), compute_dtype="float32")
+    if cfg.moe is not None:
+        # dropless capacity: prefill routes tokens against sequence-wide
+        # competition while decode routes alone — with capacity drops the two
+        # paths legitimately differ, so remove drops for the equality check.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(
+                cfg.moe, capacity_factor=float(cfg.moe.num_experts)))
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    B, S = 2, 17
+    batch = _batch(cfg, B, S, seed=2)
+    full_logits, _ = jax.jit(
+        lambda p, b: M.prefill(p, b, cfg, s_max=S + 4))(params, batch)
+    short = dict(batch, tokens=batch["tokens"][:, :S - 1])
+    _, cache = jax.jit(
+        lambda p, b: M.prefill(p, b, cfg, s_max=S + 4))(params, short)
+    step_logits, _ = jax.jit(
+        lambda p, t, c: M.decode_step(p, t, c, cfg))(
+        params, batch["tokens"][:, S - 1:S], cache)
+    got = np.asarray(step_logits, np.float32)[:, :cfg.vocab]
+    exp = np.asarray(full_logits, np.float32)[:, :cfg.vocab]
+    np.testing.assert_allclose(got, exp, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_family(arch):
+    """Full config param counts are in the family's published ballpark."""
+    from repro.configs import get_config
+    expected = {
+        "whisper_medium": (0.7e9, 1.2e9),
+        "mamba2_130m": (0.11e9, 0.16e9),
+        "minicpm_2b": (2.0e9, 3.3e9),
+        "smollm_135m": (0.12e9, 0.16e9),
+        "qwen3_4b": (3.3e9, 4.8e9),
+        "gemma3_1b": (0.8e9, 1.3e9),
+        "granite_moe_1b_a400m": (1.0e9, 1.7e9),
+        "mixtral_8x22b": (1.3e11, 1.5e11),
+        "recurrentgemma_2b": (2.2e9, 3.3e9),
+        "llama32_vision_90b": (0.8e11, 1.0e11),
+    }
+    lo, hi = expected[arch]
+    n = count_params(get_config(arch))
+    assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]"
+
+
+def test_sliding_window_restricts_attention():
+    """A token beyond the window cannot influence a local-attention output.
+    (Dense FFN config: MoE capacity routing would legitimately couple distant
+    tokens through expert-slot displacement.)"""
+    from repro.models.config import ModelConfig
+    cfg = ModelConfig("win", n_layers=2, d_model=32, n_q=4, n_kv=2, d_ff=64,
+                      vocab=64, d_head=8, layer_pattern=("lattn", "lattn"),
+                      window=8, compute_dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    B, S = 1, 16
+    b1 = _batch(cfg, B, S, seed=4)
+    toks = np.asarray(b1["tokens"]).copy()
+    toks2 = toks.copy()
+    toks2[0, 0] = (toks2[0, 0] + 1) % cfg.vocab  # perturb far-away token
+    out1, _ = jax.jit(lambda p, b: M.prefill(p, b, cfg, s_max=S))(
+        params, dict(b1, tokens=jnp.asarray(toks)))
+    out2, _ = jax.jit(lambda p, b: M.prefill(p, b, cfg, s_max=S))(
+        params, dict(b1, tokens=jnp.asarray(toks2)))
+    # position 15 attends to (7..15] only => logits unchanged
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ring_buffer_matches_full_cache():
+    """lattn ring cache (window-sized) == attn full cache restricted by mask."""
+    from repro.models.config import ModelConfig
+    base = dict(n_layers=2, d_model=32, n_q=4, n_kv=2, d_ff=64, vocab=64,
+                d_head=8, window=8, compute_dtype="float32")
+    cfg_l = ModelConfig("ring", layer_pattern=("lattn", "lattn"), **base)
+    params = init_params(cfg_l, jax.random.PRNGKey(0))
+    B, S, gen = 1, 12, 6
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, 64, (B, S + gen)), jnp.int32)
+    # path A: direct prefill over longer prompt
+    fullA, _ = jax.jit(lambda p, b: M.prefill(p, b, cfg_l, s_max=S + gen))(
+        params, {"tokens": toks})
+    # path B: prefill prefix, decode the rest through the ring buffer
+    _, cache = jax.jit(lambda p, b: M.prefill(p, b, cfg_l, s_max=S + gen))(
+        params, {"tokens": toks[:, :S]})
+    logits = None
+    dec = jax.jit(lambda p, t, c: M.decode_step(p, t, c, cfg_l))
+    for i in range(S, S + gen):
+        logits, cache = dec(params, toks[:, i:i + 1], cache)
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(fullA, np.float32),
+                               rtol=3e-2, atol=3e-2)

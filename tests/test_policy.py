@@ -1,0 +1,92 @@
+"""Merge policy math: Eq. 4/5/6, delayed compaction, policy orderings."""
+import math
+
+import pytest
+
+from repro.core import Garnering, Leveling, make_policy
+
+
+def test_eq4_capacity_ratio():
+    """C_i / C_{i-1} = T / c^{L-i} (Eq. 4), with C_0 = B."""
+    g = Garnering(T=2.0, c=0.8)
+    B, L = 1 << 20, 7
+    prev = float(B)
+    for i in range(1, L + 1):
+        cap = g.capacity(i, L, B)
+        assert cap / prev == pytest.approx(2.0 / 0.8 ** (L - i), rel=1e-9)
+        prev = cap
+
+
+def test_c_equals_one_is_leveling():
+    """Paper §4.1: Garnering with c=1 has Leveling's capacity ratios."""
+    g = Garnering(T=3.0, c=1.0)
+    l = Leveling(T=3.0)
+    for i in range(1, 8):
+        assert g.capacity(i, 8, 1000) == pytest.approx(l.capacity(i, 8, 1000))
+
+
+def test_capacities_grow_with_L():
+    """Delayed last-level compaction is sound because every capacity grows
+    when L grows (paper §3.1)."""
+    g = Garnering(T=2.0, c=0.8)
+    for i in range(1, 6):
+        for L in range(i, 10):
+            assert g.capacity(i, L + 1, 1000) > g.capacity(i, L, 1000)
+
+
+def test_eq6_levels_sublogarithmic():
+    g = Garnering(T=2.0, c=0.8)
+    B = 1 << 20
+    prev_L = 0.0
+    ratios = []
+    for k in range(4, 16):
+        L = g.predicted_levels(B * 2 ** k, B)
+        ratios.append(L / math.sqrt(k))
+        assert L >= prev_L
+        prev_L = L
+    # L / sqrt(log N) is ~constant => predicted levels track Eq. 6
+    assert max(ratios) / min(ratios) < 1.6
+
+
+def test_delayed_compaction_counted():
+    g = Garnering(T=2.0, c=0.8)
+    B = 1000
+    # last level (1) marginally overfull: plan grows L instead of compacting
+    # (capacity(1, 2) = capacity(1, 1)/c covers the overflow — §3.1)
+    levels = [[], [int(g.capacity(1, 1, B) * 1.1)]]
+    new_L, task, delayed = g.plan(levels, 1, B)
+    assert delayed >= 1 and new_L >= 2
+    assert task is None or task.src_level == 0
+
+
+def test_garnering_plan_prioritizes_lower_levels():
+    g = Garnering(T=2.0, c=0.8, l0_trigger=4)
+    B = 1000
+    big = int(1e9)
+    levels = [[], [big], [big]]
+    new_L, task, _ = g.plan(levels, 3, B)
+    assert task is not None and task.src_level == 1
+
+
+@pytest.mark.parametrize("name", ["leveling", "tiering", "lazy-leveling",
+                                  "qlsm-bush", "garnering"])
+def test_plan_terminates(name):
+    """Repeatedly applying plan+simulated-merge reaches a quiet state."""
+    p = make_policy(name, T=2.0, c=0.8)
+    B = 1000
+    levels = [[B] * 6, [B], [2 * B], [4 * B]]
+    L = 3
+    for _ in range(100):
+        L, task, _ = p.plan(levels, L, B)
+        if task is None:
+            break
+        while len(levels) <= task.dst_level:
+            levels.append([])
+        moved = sum(levels[task.src_level])
+        if task.include_dst:
+            levels[task.dst_level] = [moved + sum(levels[task.dst_level])]
+        else:
+            levels[task.dst_level].append(moved)
+        levels[task.src_level] = []
+    else:
+        pytest.fail(f"{name}: compaction loop did not quiesce")

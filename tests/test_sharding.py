@@ -1,0 +1,84 @@
+"""Sharding rules: divisibility fallbacks, greedy spec dedup, cell coverage."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.sharding import make_rules, spec_for, tree_shardings
+from repro.models.params import logical_specs, param_table
+
+
+class FakeMesh:
+    """Shape-only stand-in (tests must not allocate 256 devices)."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.zeros(shape)
+        self.shape = dict(zip(names, shape))
+
+
+MESH = FakeMesh((16, 16), ("data", "model"))
+
+
+def test_spec_dedup_never_reuses_axis():
+    rules = {"a": "model", "b": "model", "c": ("data",)}
+    spec = spec_for(("a", "b", "c"), rules)
+    assert spec == P("model", None, "data")
+
+
+def test_heads_fallback_smollm():
+    cfg = get_config("smollm_135m")  # 9 heads
+    prules, arules = make_rules(cfg, MESH, "train", 256, 4096)
+    assert prules["heads"] is None and prules["mlp"] == "model"
+    assert arules["seq"] == "model"  # SP fallback engaged
+
+
+def test_heads_tp_qwen3():
+    cfg = get_config("qwen3_4b")  # 32 heads
+    prules, arules = make_rules(cfg, MESH, "train", 256, 4096)
+    assert prules["heads"] == "model"
+    assert arules["seq"] is None
+    # decode: kv=8 unshardable => flash-decoding over kv_seq
+    _, drules = make_rules(cfg, MESH, "decode", 128, 32768)
+    assert drules["kv_seq"] == "model" and drules["heads"] is None
+
+
+def test_moe_expert_rules():
+    g = get_config("granite_moe_1b_a400m")   # 32 experts: EP
+    m = get_config("mixtral_8x22b")          # 8 experts: fallback to TP
+    assert make_rules(g, MESH, "train", 256, 4096)[0]["expert"] == "model"
+    assert make_rules(m, MESH, "train", 256, 4096)[0]["expert"] is None
+
+
+def test_batch1_cells_replicate_batch():
+    cfg = get_config("gemma3_1b")
+    _, arules = make_rules(cfg, MESH, "decode", 1, 524288)
+    assert arules["batch"] is None
+    assert arules["kv_seq"] == ("data", "model")
+
+
+def test_every_cell_has_valid_param_specs():
+    """Every runnable (arch x shape): all param specs rank-match and every
+    sharded dim is divisible by its mesh axes."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        specs = logical_specs(cfg)
+        flat = jax.tree.flatten(specs,
+                                is_leaf=lambda x: isinstance(x, tuple))[0]
+        table = jax.tree.flatten(param_table(cfg),
+                                 is_leaf=lambda x: hasattr(x, "logical"))[0]
+        for shape_name, shape in SHAPES.items():
+            if not shape_applicable(cfg, shape)[0]:
+                continue
+            prules, _ = make_rules(cfg, MESH, shape.mode,
+                                   shape.global_batch, shape.seq_len)
+            for spec_leaf, tbl in zip(flat, table):
+                p = spec_for(spec_leaf, prules)
+                assert len(p) <= len(tbl.shape)
+                for dim, part in zip(tbl.shape, tuple(p)):
+                    if part is None:
+                        continue
+                    parts = (part,) if isinstance(part, str) else part
+                    k = int(np.prod([MESH.shape[a] for a in parts]))
+                    assert dim % k == 0, (arch, tbl.shape, p)
