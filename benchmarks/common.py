@@ -56,6 +56,30 @@ def read_random(db: LSMStore, n_ops: int, key_space: int,
     return (time.perf_counter() - t0) / n_ops * 1e6
 
 
+def multiget_random(db: LSMStore, n_ops: int, key_space: int, seed: int = 2,
+                    batch: int = 4096) -> float:
+    """Batched point reads over the same key stream as ``read_random``."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, n_ops, dtype=np.uint64)
+    t0 = time.perf_counter()
+    for i in range(0, n_ops, batch):
+        db.multi_get(keys[i:i + batch])
+    return (time.perf_counter() - t0) / n_ops * 1e6
+
+
+def scan_random(db: LSMStore, n_ops: int, key_space: int, length: int,
+                seed: int = 3, scalar: bool = False) -> float:
+    """Random range reads of ``length`` entries; ``scalar=True`` uses the
+    reference seek-retry path (``scan_scalar``) as the baseline."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space, n_ops, dtype=np.uint64)
+    fn = db.scan_scalar if scalar else db.scan
+    t0 = time.perf_counter()
+    for k in keys:
+        fn(int(k), length)
+    return (time.perf_counter() - t0) / n_ops * 1e6
+
+
 def seek_random(db: LSMStore, n_ops: int, key_space: int, nexts: int = 0,
                 seed: int = 3) -> float:
     rng = np.random.default_rng(seed)

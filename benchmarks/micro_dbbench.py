@@ -2,21 +2,26 @@
 
 Autumn (Garnering c=0.8, T=2) vs the RocksDB baseline (Leveling == Garnering
 with c=1.0, exactly as the paper's §4.1 notes).  No bloom filters (worst-case
-point reads, §4.2.1).  Reports us/op wall time and block-I/O counts.
+point reads, §4.2.1).  Reports us/op wall time and block-I/O counts, plus the
+batched read subsystem (DESIGN.md §3): ``multi_get`` vs the scalar ``get``
+loop and the streaming ``MergingIterator`` scan vs the reference seek-retry
+``scan_scalar`` loop, with their speedups.
 """
 from __future__ import annotations
 
 from typing import Dict, List
 
-from .common import (DEFAULT_N, fill_random, fill_seq, make_db, read_random,
-                     seek_random)
+from .common import (DEFAULT_N, fill_random, fill_seq, make_db,
+                     multiget_random, read_random, scan_random, seek_random)
 
 VALUE_SIZES = (50, 100, 200)   # Zippy/UP2X, UDB/VAR, APP/ETC (paper §4.2.1)
+SCAN_LEN = 100                 # entries per iterator scan (db_bench seek+next)
 
 
 def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
     rows = []
     n_reads = max(n // 4, 1000)
+    n_scans = max(n_reads // 25, 100)
     for vs in value_sizes:
         for name, c in (("rocksdb(leveling)", 1.0), ("autumn(c=.8)", 0.8)):
             db_seq = make_db(c=c)
@@ -27,16 +32,27 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
             s0 = db.stats.snapshot()
             t_read = read_random(db, n_reads, key_space)
             d_read = db.stats.delta(s0)
+            t_multiget = multiget_random(db, n_reads, key_space)
             s0 = db.stats.snapshot()
             t_seek = seek_random(db, n_reads, key_space, 0)
             d_seek = db.stats.delta(s0)
             t_next10 = seek_random(db, n_reads, key_space, 10)
             t_next100 = seek_random(db, max(n_reads // 4, 250), key_space, 100)
+            t_scan_scalar = scan_random(db, n_scans, key_space, SCAN_LEN,
+                                        scalar=True)
+            t_scan_iter = scan_random(db, n_scans, key_space, SCAN_LEN,
+                                      scalar=False)
             rows.append(dict(
                 system=name, value_size=vs, levels=db.num_levels_in_use,
                 fillseq_us=t_fillseq, fillrandom_us=t_fillrand,
                 readrandom_us=t_read, seekrandom_us=t_seek,
                 seeknext10_us=t_next10, seeknext100_us=t_next100,
+                multiget_us=t_multiget,
+                multiget_speedup=t_read / t_multiget if t_multiget else 0.0,
+                scanscalar100_us=t_scan_scalar,
+                iterscan100_us=t_scan_iter,
+                iterscan_speedup=(t_scan_scalar / t_scan_iter
+                                  if t_scan_iter else 0.0),
                 write_amp=db.stats.write_amplification(),
                 point_blocks_per_op=d_read.blocks_read / n_reads,
                 seek_blocks_per_op=d_seek.blocks_read / n_reads,
@@ -47,14 +63,18 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
 def main(n: int = DEFAULT_N):
     rows = run(n)
     hdr = ("system,value_size,levels,fillseq_us,fillrandom_us,readrandom_us,"
-           "seekrandom_us,seeknext10_us,seeknext100_us,write_amp,"
-           "point_blocks,seek_blocks")
+           "seekrandom_us,seeknext10_us,seeknext100_us,multiget_us,"
+           "multiget_speedup,scanscalar100_us,iterscan100_us,"
+           "iterscan_speedup,write_amp,point_blocks,seek_blocks")
     print(hdr)
     for r in rows:
         print(f"{r['system']},{r['value_size']},{r['levels']},"
               f"{r['fillseq_us']:.2f},{r['fillrandom_us']:.2f},"
               f"{r['readrandom_us']:.2f},{r['seekrandom_us']:.2f},"
               f"{r['seeknext10_us']:.2f},{r['seeknext100_us']:.2f},"
+              f"{r['multiget_us']:.2f},{r['multiget_speedup']:.1f},"
+              f"{r['scanscalar100_us']:.2f},{r['iterscan100_us']:.2f},"
+              f"{r['iterscan_speedup']:.1f},"
               f"{r['write_amp']:.2f},{r['point_blocks_per_op']:.3f},"
               f"{r['seek_blocks_per_op']:.3f}")
     return rows

@@ -74,6 +74,26 @@ def _mix(db: LSMStore, n: int, n_ops: int, read_frac: float,
                 p99_us=pct(lat, 99) if lat else 0.0)
 
 
+def _mix_batched_reads(db: LSMStore, n: int, n_ops: int, batch: int = 256,
+                       seed: int = 11) -> Dict:
+    """Workload C through the batched read path: zipfian keys resolved in
+    ``batch``-sized ``multi_get`` waves (the KV-serving lookup shape)."""
+    zipf = Zipfian(n, seed=seed)
+    keys = fnv_scramble(zipf.sample(n_ops).astype(np.uint64))
+    lat: List[float] = []          # per-key us, one sample per wave
+    t0 = time.perf_counter()
+    for i in range(0, n_ops, batch):
+        wave = keys[i:i + batch]
+        t1 = time.perf_counter()
+        db.multi_get(wave)
+        lat.append((time.perf_counter() - t1) * 1e6 / len(wave))
+    dt = time.perf_counter() - t0
+    return dict(kops=n_ops / dt / 1e3,
+                avg_us=float(np.mean(lat)),
+                p95_us=pct(lat, 95),
+                p99_us=pct(lat, 99))
+
+
 WORKLOADS = {
     "A": dict(read_frac=0.5),                                  # 50r/50u
     "B": dict(read_frac=0.95),                                 # 95r/5u
@@ -101,6 +121,13 @@ def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
                 row[f"{w}_avg_us"] = m["avg_us"]
                 row[f"{w}_p95_us"] = m["p95_us"]
                 row[f"{w}_p99_us"] = m["p99_us"]
+            if w == "C":
+                # same tree state as C (read-only workload): batched vs
+                # scalar point reads are a like-for-like comparison here
+                mb = _mix_batched_reads(db, n, n_ops)
+                row["Cbatch_kops"] = mb["kops"]
+                row["Cbatch_speedup"] = (mb["kops"] / m["kops"]
+                                         if m["kops"] else 0.0)
         rows.append(row)
     return rows
 

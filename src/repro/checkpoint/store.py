@@ -43,7 +43,7 @@ _MANIFEST_KEY_BASE = np.uint64(1) << np.uint64(62)  # manifest id space
 
 def _leaf_paths(tree: Pytree) -> List[Tuple[str, Any]]:
     import jax
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
 
 
@@ -151,7 +151,7 @@ class CheckpointStore:
         if flat_restored is None:
             return None
         leaves = []
-        flat = jax.tree.flatten_with_path(like)
+        flat = jax.tree_util.tree_flatten_with_path(like)
         shard_leaves = (jax.tree.leaves(
             shardings, is_leaf=lambda s: hasattr(s, "spec"))
             if shardings is not None else [None] * len(flat[0]))

@@ -11,6 +11,7 @@ from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
                     garnering_theoretical_fprs, theoretical_fpr,
                     zero_result_read_cost)
 from .engine import LSMConfig, LSMStore
+from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
 from .memtable import Memtable, WriteAheadLog
 from .policy import (POLICIES, CompactionTask, Garnering, LazyLeveling,
@@ -21,7 +22,8 @@ from .types import BLOCK_SIZE, KEY_BYTES, IOStats
 __all__ = [
     "LSMStore", "LSMConfig", "IOStats", "BloomFilter", "allocate_fprs",
     "bits_for_fpr", "theoretical_fpr", "garnering_theoretical_fprs",
-    "zero_result_read_cost", "Manifest", "RunStorage", "Version", "Memtable",
+    "zero_result_read_cost", "MergingIterator", "Manifest", "RunStorage",
+    "Version", "Memtable",
     "WriteAheadLog", "POLICIES", "CompactionTask", "Garnering", "LazyLeveling",
     "Leveling", "MergePolicy", "QLSMBush", "Tiering", "make_policy",
     "SortedRun", "build_run", "merge_runs", "BLOCK_SIZE", "KEY_BYTES",

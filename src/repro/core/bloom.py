@@ -1,6 +1,13 @@
 """Bloom filters + the Monkey/Autumn optimal FPR allocation (paper Eq. 2, 7-10).
 
 ``BloomFilter`` is a vectorized double-hashing bloom filter over uint64 keys.
+Bit positions are computed with the *same* 32-bit murmur-style hash family as
+the Pallas batched-probe kernel (``repro.kernels.bloom_probe.hash_pair``) and
+the bitset is stored as uint32 words, so the engine's batched read path can
+probe the identical filter either in numpy (``may_contain``) or on the VPU
+(``repro.kernels.ops.bloom_probe_filter``) and get bit-identical answers
+(DESIGN.md §3).
+
 ``allocate_fprs`` solves the Monkey optimization adapted to Garnering: minimize
 the zero-result point-read cost R = sum_i p_i subject to the total filter
 memory budget (Eq. 8).  The Lagrangian solution is p_i proportional to N_i
@@ -14,14 +21,40 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .types import splitmix64
-
 LN2 = math.log(2.0)
 LN2_SQ = LN2 * LN2
 
 
+def _mix32(x: np.ndarray, c1: int, c2: int) -> np.ndarray:
+    """numpy twin of kernels.bloom_probe._mix32 (must stay in lockstep)."""
+    x = x.astype(np.uint32, copy=True)
+    x ^= x >> np.uint32(16)
+    x *= np.uint32(c1)
+    x ^= x >> np.uint32(13)
+    x *= np.uint32(c2)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def hash_pair(keys: np.ndarray):
+    """Two independent uint32 hashes of u64 keys — identical positions to the
+    Pallas kernel's ``hash_pair`` on the (lo, hi) halves."""
+    keys = np.asarray(keys, dtype=np.uint64)
+    lo = (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+    hi = (keys >> np.uint64(32)).astype(np.uint32)
+    h1 = _mix32(lo ^ _mix32(hi, 0x85EBCA6B, 0xC2B2AE35),
+                0xCC9E2D51, 0x1B873593)
+    h2 = _mix32(hi ^ _mix32(lo, 0x27D4EB2F, 0x165667B1),
+                0x9E3779B9, 0x85EBCA77) | np.uint32(1)
+    return h1, h2
+
+
 class BloomFilter:
-    """Standard bloom filter with k = round(bits_per_key * ln2) double hashes."""
+    """Standard bloom filter with k = round(bits_per_key * ln2) double hashes.
+
+    ``bits`` is a uint32 word array with m_bits == 32 * len(bits), the exact
+    layout ``bloom_probe_pallas`` consumes.
+    """
 
     __slots__ = ("m_bits", "k", "bits", "n_keys")
 
@@ -32,36 +65,32 @@ class BloomFilter:
             # Degenerate filter: answers "maybe" for everything (FPR = 1).
             self.m_bits = 0
             self.k = 0
-            self.bits = np.zeros(0, dtype=np.uint64)
+            self.bits = np.zeros(0, dtype=np.uint32)
             return
-        m = max(64, int(round(bits_per_key * n)))
+        # Round up to whole uint32 words: the Pallas kernel derives m from the
+        # word count, so numpy and VPU probes must agree on m exactly.
+        m = -(-max(64, int(round(bits_per_key * n))) // 32) * 32
         self.m_bits = m
         self.k = max(1, int(round(bits_per_key * LN2)))
-        self.bits = np.zeros((m + 63) // 64, dtype=np.uint64)
-        h1, h2 = self._hashes(np.asarray(keys, dtype=np.uint64))
+        self.bits = np.zeros(m // 32, dtype=np.uint32)
+        h1, h2 = hash_pair(np.asarray(keys, dtype=np.uint64))
         for i in range(self.k):
-            pos = (h1 + np.uint64(i) * h2) % np.uint64(m)
-            np.bitwise_or.at(self.bits, (pos >> np.uint64(6)).astype(np.int64),
-                             np.uint64(1) << (pos & np.uint64(63)))
-
-    @staticmethod
-    def _hashes(keys: np.ndarray):
-        h1 = splitmix64(keys)
-        h2 = splitmix64(h1) | np.uint64(1)  # odd => full-period double hashing
-        return h1, h2
+            pos = (h1 + np.uint32(i) * h2) % np.uint32(m)
+            np.bitwise_or.at(self.bits, (pos >> np.uint32(5)).astype(np.int64),
+                             np.uint32(1) << (pos & np.uint32(31)))
 
     def may_contain(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized membership test. True = maybe present, False = absent."""
         keys = np.asarray(keys, dtype=np.uint64)
         if self.m_bits == 0:
             return np.ones(keys.shape, dtype=bool)
-        h1, h2 = self._hashes(keys)
+        h1, h2 = hash_pair(keys)
         out = np.ones(keys.shape, dtype=bool)
-        m = np.uint64(self.m_bits)
+        m = np.uint32(self.m_bits)
         for i in range(self.k):
-            pos = (h1 + np.uint64(i) * h2) % m
-            word = self.bits[(pos >> np.uint64(6)).astype(np.int64)]
-            out &= (word >> (pos & np.uint64(63))) & np.uint64(1) != 0
+            pos = (h1 + np.uint32(i) * h2) % m
+            word = self.bits[(pos >> np.uint32(5)).astype(np.int64)]
+            out &= (word >> (pos & np.uint32(31))) & np.uint32(1) != 0
         return out
 
     @property

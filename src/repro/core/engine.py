@@ -14,12 +14,15 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bloom import allocate_fprs, bits_for_fpr
+from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
 from .memtable import Memtable, WriteAheadLog
 from .policy import CompactionTask, MergePolicy, make_policy
 from .run import SortedRun, build_run, merge_runs
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
                     TOMBSTONE_LEN, IOStats)
+
+_UNSET = object()
 
 
 @dataclasses.dataclass
@@ -36,6 +39,8 @@ class LSMConfig:
     wal_fsync_every_write: bool = False # False => fsync at flush (db default)
     block_size: int = BLOCK_SIZE
     key_bytes: int = KEY_BYTES
+    use_pallas_bloom: bool = False      # route multi_get probes through the
+                                        # Pallas kernel (numpy when unavailable)
 
 
 class LSMStore:
@@ -52,6 +57,7 @@ class LSMStore:
         self._levels: List[List[SortedRun]] = [[]]
         self._max_level = 1
         self._seq = 0
+        self._pallas_probe_fn = _UNSET  # lazy: resolved on first multi_get
 
     # ------------------------------------------------------------- writes
     def put(self, key: int, value: bytes):
@@ -181,6 +187,66 @@ class LSMStore:
                 return value
         return None
 
+    def _bloom_probe_fn(self):
+        """Resolve the Pallas batched-probe route (numpy fallback).
+
+        The config flag is re-read every call so toggling
+        ``use_pallas_bloom`` on a live store takes effect; only the import
+        result is cached.
+        """
+        if not self.config.use_pallas_bloom:
+            return None
+        if self._pallas_probe_fn is _UNSET:
+            try:
+                from repro.kernels.ops import bloom_probe_filter
+                self._pallas_probe_fn = bloom_probe_filter
+            except Exception:       # jax/pallas unavailable: stay on numpy
+                self._pallas_probe_fn = None
+        return self._pallas_probe_fn
+
+    def multi_get(self, keys: Sequence[int],
+                  snapshot: Optional[Version] = None) -> List[Optional[bytes]]:
+        """Batched point reads: semantically ``[get(k) for k in keys]``.
+
+        The batch is resolved level by level: every still-pending key is
+        bloom-probed against a run in one vectorized pass (optionally through
+        the Pallas kernel, DESIGN.md §3) and located with one searchsorted
+        over the run's fence-pointed key array.  Aggregate IOStats accounting
+        is identical to the equivalent sequence of scalar ``get`` calls.
+        """
+        keys_arr = np.asarray(list(keys), dtype=KEY_DTYPE)
+        n = int(keys_arr.size)
+        self.stats.point_reads += n
+        results: List[Optional[bytes]] = [None] * n
+        if n == 0:
+            return results
+        if snapshot is None and len(self.memtable):
+            keep = []
+            for j in range(n):
+                hit = self.memtable.get(int(keys_arr[j]))
+                if hit is not None:
+                    results[j] = hit[1]    # value, or None for a tombstone
+                else:
+                    keep.append(j)
+            pending = np.asarray(keep, dtype=np.int64)
+        else:
+            pending = np.arange(n, dtype=np.int64)
+        use_bloom = self.config.bits_per_key > 0
+        probe_fn = self._bloom_probe_fn()
+        for run in self._runs_newest_first(self._read_state(snapshot)):
+            if pending.size == 0:
+                break
+            if len(run) == 0:
+                continue
+            self.stats.runs_touched_point += int(pending.size)
+            found, values = run.point_get_batch(
+                keys_arr[pending], self.stats, use_bloom, probe_fn)
+            if found.any():
+                for p in np.nonzero(found)[0]:
+                    results[int(pending[p])] = values[int(p)]
+                pending = pending[~found]
+        return results
+
     def seek(self, key: int, snapshot: Optional[Version] = None) -> Optional[int]:
         """Position a merging iterator at the first key >= key (db_bench Seek).
 
@@ -204,13 +270,43 @@ class LSMStore:
                     best = k
         return best
 
+    def iterator(self, snapshot: Optional[Version] = None,
+                 chunk: int = 512) -> MergingIterator:
+        """A streaming merging iterator over the current (or snapshot) state.
+
+        Holds one cursor per run + the memtable; see core.iterator for the
+        merge and I/O-accounting semantics (DESIGN.md §3).  The iterator reads
+        a frozen set of runs — writes/compactions after creation are not seen
+        by run cursors (memtable updates may be, as in RocksDB iterators pin
+        SSTs but here the memtable is shared; take a snapshot for isolation).
+        """
+        levels = self._read_state(snapshot)
+        runs = [r for r in self._runs_newest_first(levels) if len(r)]
+        mem = self.memtable if snapshot is None else None
+        return MergingIterator(runs, memtable=mem, stats=self.stats,
+                               chunk=chunk)
+
     def scan(self, start_key: int, count: int,
              snapshot: Optional[Version] = None) -> List[Tuple[int, bytes]]:
         """Range read: first ``count`` live entries with key >= start_key.
 
-        Implements a merging iterator over all runs + memtable; I/O accounting
-        charges each run one seek block plus the blocks spanned by the entries
-        the merged iterator actually consumed from that run.
+        One seek per run positions a cursor; the merged stream then refills
+        incrementally per run (no restart loop), charging each run the blocks
+        it actually contributed — see core.iterator.
+        """
+        self.stats.range_reads += 1
+        it = self.iterator(snapshot)
+        return it.scan(int(start_key), count)
+
+    def scan_scalar(self, start_key: int, count: int,
+                    snapshot: Optional[Version] = None
+                    ) -> List[Tuple[int, bytes]]:
+        """Reference range read (the pre-iterator seek-retry implementation).
+
+        Kept as the differential-test oracle and the benchmarks' scalar
+        baseline: slices ``count`` candidates from every run, sort-merges the
+        python lists, and retries with a 4x larger window when a truncated
+        run could still hide smaller keys.
         """
         self.stats.range_reads += 1
         levels = self._read_state(snapshot)
@@ -284,7 +380,13 @@ class LSMStore:
 
     # ----------------------------------------------------------- snapshots
     def get_snapshot(self) -> Version:
-        return self.manifest.current()
+        """Pin the current version: snapshot reads stay valid across any
+        number of later flushes/compactions until ``release_snapshot``."""
+        return self.manifest.pin(self.manifest.current())
+
+    def release_snapshot(self, snapshot: Version) -> None:
+        self.manifest.unpin(snapshot.version_id)
+        self.manifest.gc()
 
     # ------------------------------------------------------------ recovery
     def crash(self):

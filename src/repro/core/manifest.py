@@ -51,6 +51,7 @@ class Manifest:
     def __init__(self, storage: RunStorage):
         self.storage = storage
         self._log: List[Version] = []
+        self._pinned: Dict[int, Version] = {}  # long-lived reader snapshots
         self._synced_upto = 0  # number of durable versions
         self._next_id = 0
         self.commit(levels=[[]], max_level=1, last_seq=0, stats=IOStats())
@@ -77,13 +78,26 @@ class Manifest:
     def current(self) -> Version:
         return self._log[-1]
 
+    def pin(self, v: Version) -> Version:
+        """Pin a version for a long-lived reader: its runs survive GC even
+        after the version leaves the manifest's durable tail."""
+        self._pinned[v.version_id] = v
+        return v
+
+    def unpin(self, version_id: int) -> None:
+        self._pinned.pop(version_id, None)
+
     def crash(self):
         """Lose versions past the fsync watermark (simulated crash)."""
+        self._pinned.clear()  # reader pins are process state, not durable
         self._log = self._log[: max(self._synced_upto, 1)]
 
     def live_run_ids(self) -> List[int]:
         ids: List[int] = []
         for v in self._log:
+            for lvl in v.levels:
+                ids.extend(lvl)
+        for v in self._pinned.values():
             for lvl in v.levels:
                 ids.extend(lvl)
         return ids

@@ -93,6 +93,50 @@ class SortedRun:
         stats.false_positives += 1
         return False, None, -1
 
+    def point_get_batch(self, keys: np.ndarray, stats: IOStats,
+                        use_bloom: bool = True, probe_fn=None
+                        ) -> Tuple[np.ndarray, List[Optional[bytes]]]:
+        """Vectorized ``point_get`` over a batch of keys.
+
+        Returns ``(found, values)``: found[i] True means key i's newest
+        version lives in this run (values[i] is its bytes, or None for a
+        tombstone).  One bloom pass + one searchsorted over the whole batch;
+        aggregate IOStats accounting is identical to len(keys) scalar
+        ``point_get`` calls.  ``probe_fn(bloom, keys) -> bool mask`` optionally
+        reroutes the filter probe (e.g. through the Pallas kernel).
+        """
+        keys = np.ascontiguousarray(keys, dtype=KEY_DTYPE)
+        n = keys.size
+        found = np.zeros(n, dtype=bool)
+        values: List[Optional[bytes]] = [None] * n
+        if use_bloom and self.bloom.k > 0:
+            stats.bloom_probes += n
+            if probe_fn is not None:
+                maybe = np.asarray(probe_fn(self.bloom, keys), dtype=bool)
+            else:
+                maybe = self.bloom.may_contain(keys)
+            stats.bloom_negatives += int(n - np.count_nonzero(maybe))
+            cand = np.nonzero(maybe)[0]
+        else:
+            cand = np.arange(n)
+        if cand.size == 0:
+            return found, values
+        # Fence pointers give each candidate its unique block: 1 read apiece.
+        stats.blocks_read += int(cand.size)
+        idx = np.searchsorted(self.keys, keys[cand])
+        inb = idx < len(self)
+        hit = np.zeros(cand.size, dtype=bool)
+        hit[inb] = self.keys[idx[inb]] == keys[cand][inb]
+        stats.false_positives += int(cand.size - np.count_nonzero(hit))
+        for p in np.nonzero(hit)[0]:
+            i = int(idx[p])
+            j = int(cand[p])
+            found[j] = True
+            vlen = int(self.vlens[i])
+            if vlen != TOMBSTONE_LEN:
+                values[j] = bytes(self.vals[i, :vlen])
+        return found, values
+
     def seek_idx(self, key: int) -> int:
         return int(np.searchsorted(self.keys, np.uint64(key), side="left"))
 

@@ -39,6 +39,35 @@ def bloom_probe(keys, bits: jax.Array, k_hashes: int = 7,
     return _bloom_probe_jit(lo, hi, bits, k_hashes, interpret)
 
 
+def bloom_probe_filter(bf, keys, interpret: bool = True) -> np.ndarray:
+    """Probe a ``repro.core.bloom.BloomFilter`` with the Pallas kernel.
+
+    The filter builds its bitset with the kernel's own 32-bit hash family, so
+    this returns bit-identical answers to ``bf.may_contain`` — it is the
+    engine's accelerator route for batched point reads (DESIGN.md §3).  Pads
+    the query batch up to the kernel's block multiple and strips the pad.
+    """
+    from .bloom_probe import QUERY_BLOCK
+
+    keys = np.asarray(keys, dtype=np.uint64)
+    n = keys.size
+    if bf.k == 0 or n == 0:
+        return np.ones(n, dtype=bool)
+    # Quantize the batch shape (pow2 up to a block, then block multiples) so
+    # the jit cache holds a handful of kernels instead of one per batch size.
+    if n < QUERY_BLOCK:
+        m = 64
+        while m < n:
+            m *= 2
+    else:
+        m = -(-n // QUERY_BLOCK) * QUERY_BLOCK
+    if m != n:
+        keys = np.concatenate([keys, np.zeros(m - n, np.uint64)])
+    out = np.asarray(bloom_probe(keys, jnp.asarray(bf.bits), bf.k,
+                                 interpret=interpret))
+    return out[:n]
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def merge_sorted_tiles(a: jax.Array, b: jax.Array, pa: jax.Array,
                        pb: jax.Array, interpret: bool = True):

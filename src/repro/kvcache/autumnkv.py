@@ -63,7 +63,7 @@ class CacheCodec:
         self.logical = M.cache_logical_specs(self.cfg, self.batch, self.s_max)
 
     def leaves(self, cache: Pytree):
-        flat_c = jax.tree.flatten_with_path(cache)[0]
+        flat_c = jax.tree_util.tree_flatten_with_path(cache)[0]
         flat_l = jax.tree.leaves(self.logical,
                                  is_leaf=lambda x: isinstance(x, tuple))
         return [(jax.tree_util.keystr(p), v, lg)
@@ -97,7 +97,7 @@ class CacheCodec:
     def write_page(self, cache: Pytree, blob: bytes, page_idx: int,
                    page: int = PAGE_TOKENS) -> Pytree:
         off = 0
-        flat = jax.tree.flatten_with_path(cache)
+        flat = jax.tree_util.tree_flatten_with_path(cache)
         out = []
         flat_l = jax.tree.leaves(self.logical,
                                  is_leaf=lambda x: isinstance(x, tuple))
@@ -122,7 +122,7 @@ class CacheCodec:
 
     def write_state(self, cache: Pytree, blob: bytes) -> Pytree:
         off = 0
-        flat = jax.tree.flatten_with_path(cache)
+        flat = jax.tree_util.tree_flatten_with_path(cache)
         out = []
         flat_l = jax.tree.leaves(self.logical,
                                  is_leaf=lambda x: isinstance(x, tuple))
@@ -178,6 +178,47 @@ class AutumnKVCache:
             cache = self.codec.write_page(cache, page_blob, i, self.page)
         self.hits += 1
         return cache
+
+    def lookup_batch(self, prompts: List[np.ndarray],
+                     template: Pytree) -> List[Optional[Pytree]]:
+        """Batched ``lookup`` for a serving wave (DESIGN.md §3).
+
+        Gathers every prompt's state + page chain-hash keys and resolves them
+        with ONE ``LSMStore.multi_get`` — the engine probes each level's
+        filters for the whole wave at once instead of walking the tree once
+        per key.  Hit/miss semantics and counters match per-prompt
+        ``lookup`` calls.
+        """
+        metas: List[Tuple[List[int], bool]] = []
+        all_keys: List[int] = []
+        for tokens in prompts:
+            hs = chain_hashes(tokens, self.page)
+            ok = bool(hs) and len(tokens) % self.page == 0
+            metas.append((hs, ok))
+            if ok:
+                all_keys.append(int(np.uint64(hs[-1]) | _STATE_TAG))
+                all_keys.extend(hs)
+        blobs = self.db.multi_get(all_keys) if all_keys else []
+        out: List[Optional[Pytree]] = []
+        off = 0
+        for hs, ok in metas:
+            if not ok:
+                self.misses += 1
+                out.append(None)
+                continue
+            state_blob = blobs[off]
+            page_blobs = blobs[off + 1: off + 1 + len(hs)]
+            off += 1 + len(hs)
+            if state_blob is None or any(b is None for b in page_blobs):
+                self.misses += 1
+                out.append(None)
+                continue
+            cache = self.codec.write_state(template, state_blob)
+            for i, blob in enumerate(page_blobs):
+                cache = self.codec.write_page(cache, blob, i, self.page)
+            self.hits += 1
+            out.append(cache)
+        return out
 
     def insert(self, tokens: np.ndarray, cache: Pytree):
         hs = chain_hashes(tokens, self.page)

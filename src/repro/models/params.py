@@ -238,7 +238,7 @@ def count_params(cfg: ModelConfig, active_only: bool = False) -> int:
     (for MODEL_FLOPS = 6 * N_active * D)."""
     table = param_table(cfg)
     total = 0
-    for path, spec in jax.tree.flatten_with_path(
+    for path, spec in jax.tree_util.tree_flatten_with_path(
             table, is_leaf=lambda x: isinstance(x, ParamSpec))[0]:
         n = int(np.prod(spec.shape))
         names = [getattr(p, "key", getattr(p, "idx", "")) for p in path]

@@ -1,7 +1,8 @@
 """Batched serving engine over the AutumnKV prefix cache.
 
 The request path (per batch):
-  1. AutumnKV lookup — full-prompt hits skip prefill (paper fast point reads);
+  1. batched AutumnKV lookup — one LSM multi_get resolves the whole wave's
+     page keys (DESIGN.md §3); full-prompt hits skip prefill;
   2. misses are prefilled together (one jit'd batched prefill);
   3. all requests decode together for gen_len steps (one jit'd decode step);
   4. freshly prefilled prompts are inserted as content-addressed pages.
@@ -64,10 +65,10 @@ class ServeEngine:
         hits: Dict[int, Pytree] = {}
         if self.kv is not None:
             template = M.init_cache(self.cfg, 1, self.s_max)
-            for i, r in enumerate(requests):
-                got = self.kv.lookup(r.prompt, template)
-                if got is not None:
-                    hits[i] = got
+            # one batched LSM multi_get across the whole wave's page keys
+            got_list = self.kv.lookup_batch([r.prompt for r in requests],
+                                            template)
+            hits = {i: g for i, g in enumerate(got_list) if g is not None}
         self.metrics["cache_hits"] += len(hits)
         # batched prefill for everyone (cheap CPU smoke sizes); cache rows of
         # hit requests are replaced by their stored pages afterwards.

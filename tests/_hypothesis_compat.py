@@ -1,0 +1,222 @@
+"""Fallback property-testing shim used when ``hypothesis`` is not installed.
+
+The seed test suite property-tests several invariants with hypothesis, but the
+bare container does not ship the package (and we may not pip install).  This
+module provides just enough of the hypothesis API surface the suite uses —
+``given``, ``settings`` and the ``strategies`` combinators below — backed by
+fixed-seed random example generators, so the same test bodies run everywhere:
+
+  * with hypothesis installed, ``conftest.py`` leaves the real package alone
+    (full shrinking / adaptive search);
+  * without it, ``install()`` registers this module as ``sys.modules
+    ["hypothesis"]`` and each ``@given`` test runs ``max_examples``
+    deterministic examples (example 0 is the minimal draw of every strategy,
+    the rest are seeded off the test name so failures reproduce).
+
+Only the strategies the repo uses are implemented: integers, floats, lists,
+tuples, sampled_from, booleans, just.
+"""
+from __future__ import annotations
+
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """Base: a strategy draws one example from a ``random.Random``."""
+
+    def example(self, rng: random.Random) -> Any:
+        raise NotImplementedError
+
+    def minimal(self) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value=None, max_value=None):
+        self.lo = -(2 ** 20) if min_value is None else int(min_value)
+        self.hi = 2 ** 20 if max_value is None else int(max_value)
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+    def minimal(self):
+        # hypothesis shrinks toward 0 when in range, else the bound nearest 0
+        return min(max(self.lo, 0), self.hi)
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=None, max_value=None, allow_nan=None,
+                 allow_infinity=None, width=64):
+        self.lo = -1e9 if min_value is None else float(min_value)
+        self.hi = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng):
+        # occasionally pin to an endpoint: boundary values find more bugs
+        u = rng.random()
+        if u < 0.05:
+            return self.lo
+        if u < 0.10:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+    def minimal(self):
+        return min(max(self.lo, 0.0), self.hi)
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size=0, max_size=None,
+                 unique=False):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = self.min_size + 20 if max_size is None else int(max_size)
+        self.unique = unique
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        out: List[Any] = []
+        tries = 0
+        while len(out) < n and tries < 50 * (n + 1):
+            x = self.elements.example(rng)
+            tries += 1
+            if self.unique and x in out:
+                continue
+            out.append(x)
+        return out
+
+    def minimal(self):
+        return [self.elements.minimal() for _ in range(self.min_size)]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *parts: Strategy):
+        self.parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self.parts)
+
+    def minimal(self):
+        return tuple(p.minimal() for p in self.parts)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, options: Sequence[Any]):
+        self.options = list(options)
+
+    def example(self, rng):
+        return rng.choice(self.options)
+
+    def minimal(self):
+        return self.options[0]
+
+
+class _Just(Strategy):
+    def __init__(self, value):
+        self.value = value
+
+    def example(self, rng):
+        return self.value
+
+    def minimal(self):
+        return self.value
+
+
+def integers(min_value=None, max_value=None) -> Strategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value=None, max_value=None, **kw) -> Strategy:
+    return _Floats(min_value, max_value, **kw)
+
+
+def lists(elements, min_size=0, max_size=None, unique=False) -> Strategy:
+    return _Lists(elements, min_size, max_size, unique)
+
+
+def tuples(*parts) -> Strategy:
+    return _Tuples(*parts)
+
+
+def sampled_from(options) -> Strategy:
+    return _SampledFrom(options)
+
+
+def booleans() -> Strategy:
+    return _SampledFrom([False, True])
+
+
+def just(value) -> Strategy:
+    return _Just(value)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **kw):
+    """Decorator recording run options; works above or below ``@given``."""
+
+    def deco(fn):
+        fn._shim_settings = dict(max_examples=max_examples)
+        return fn
+
+    return deco
+
+
+def given(*strategies: Strategy, **kw_strategies: Strategy) -> Callable:
+    """Run the test body on ``max_examples`` deterministically drawn examples.
+
+    Example 0 is every strategy's minimal draw; examples 1.. are seeded from
+    the test name and the example index, so reported failures replay exactly.
+    """
+
+    def deco(fn):
+        def runner():
+            conf = getattr(runner, "_shim_settings", None) or \
+                getattr(fn, "_shim_settings", {})
+            n = int(conf.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+            for i in range(n):
+                if i == 0:
+                    args = [s.minimal() for s in strategies]
+                    kwargs = {k: s.minimal() for k, s in kw_strategies.items()}
+                else:
+                    rng = random.Random(f"{fn.__module__}.{fn.__name__}#{i}")
+                    args = [s.example(rng) for s in strategies]
+                    kwargs = {k: s.example(rng)
+                              for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i} for {fn.__name__}: "
+                        f"args={args!r} kwargs={kwargs!r}") from e
+
+        # pytest must see a zero-arg test function (no fixture params); avoid
+        # functools.wraps so inspect.signature doesn't follow __wrapped__.
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._hypothesis_shim = True
+        return runner
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as a stand-in ``hypothesis`` package."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "tuples", "sampled_from",
+                 "booleans", "just"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(too_slow="too_slow",
+                                            filter_too_much="filter_too_much")
+    hyp.__shim__ = True
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,0 +1,17 @@
+"""Test-suite bootstrap: make property tests runnable in bare environments.
+
+If the real ``hypothesis`` package is importable we use it untouched.
+Otherwise we install the fixed-seed shim from ``_hypothesis_compat`` so the
+``from hypothesis import given, ...`` imports in the suite keep working.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_compat
+
+    _hypothesis_compat.install()

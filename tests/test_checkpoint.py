@@ -58,7 +58,7 @@ def test_point_read_single_leaf():
     t = tree(3)
     st.save(5, t)
     import jax
-    path = jax.tree_util.keystr(jax.tree.flatten_with_path(t)[0][1][0])
+    path = jax.tree_util.keystr(jax.tree_util.tree_flatten_with_path(t)[0][1][0])
     got = st.restore_leaf(5, path)
     assert got is not None
 

@@ -2,8 +2,9 @@
 import math
 
 import pytest
+from hypothesis import given, settings, strategies as st
 
-from repro.core import Garnering, Leveling, make_policy
+from repro.core import Garnering, Leveling, LSMConfig, LSMStore, make_policy
 
 
 def test_eq4_capacity_ratio():
@@ -66,6 +67,54 @@ def test_garnering_plan_prioritizes_lower_levels():
     levels = [[], [big], [big]]
     new_L, task, _ = g.plan(levels, 3, B)
     assert task is not None and task.src_level == 1
+
+
+# ---------------------------------------------------- Garnering invariants
+@given(st.floats(min_value=1.1, max_value=8.0),
+       st.integers(min_value=1, max_value=12),
+       st.integers(min_value=10, max_value=10 ** 9))
+@settings(max_examples=40, deadline=None)
+def test_c1_capacities_equal_leveling_exactly(T, L, B):
+    """Paper §4.1: Garnering with c=1 *is* Leveling — capacities are equal
+    exactly (c^x == 1.0 in floating point), at every level and tree height."""
+    g = Garnering(T=T, c=1.0)
+    lv = Leveling(T=T)
+    for i in range(1, L + 1):
+        assert g.capacity(i, L, B) == lv.capacity(i, L, B)
+
+
+@given(st.floats(min_value=1.1, max_value=8.0),
+       st.floats(min_value=0.05, max_value=1.0),
+       st.integers(min_value=1, max_value=12),
+       st.integers(min_value=10, max_value=10 ** 9))
+@settings(max_examples=60, deadline=None)
+def test_capacities_monotone_in_level(T, c, L, B):
+    """C_i is strictly increasing in i (Eq. 4: each ratio is T/c^{L-i} > 1),
+    so deeper levels always hold more — the shape delayed compaction needs."""
+    g = Garnering(T=T, c=c)
+    caps = [g.capacity(i, L, B) for i in range(1, L + 1)]
+    for lo, hi in zip(caps, caps[1:]):
+        assert hi > lo
+
+
+def test_predicted_levels_tracks_empirical_growth():
+    """Eq. 6's prediction stays within a constant factor of the levels an
+    actual Garnering tree grows as N scales up."""
+    ratios = []
+    for n in (2000, 6000, 18000):
+        db = LSMStore(LSMConfig(policy="garnering", T=2.0, c=0.8,
+                                memtable_bytes=1 << 12,
+                                base_level_bytes=1 << 14))
+        for k in range(n):
+            db.put(k, b"x" * 40)
+        db.flush()
+        pred = db.policy.predicted_levels(n * 56, db.config.base_level_bytes)
+        emp = db.num_levels_in_use
+        assert emp >= 1 and pred > 0
+        ratios.append(emp / pred)
+    # constant-factor tracking: the ratio neither explodes nor collapses
+    assert 0.3 < min(ratios) and max(ratios) < 3.5
+    assert max(ratios) / min(ratios) < 2.0
 
 
 @pytest.mark.parametrize("name", ["leveling", "tiering", "lazy-leveling",
