@@ -14,15 +14,27 @@ DEFAULT_N = 200_000
 
 def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             bits_per_key: float = 0.0, bloom_allocation: str = "monkey",
-            memtable_kb: int = 32, base_kb: int = 128) -> LSMStore:
+            memtable_kb: int = 32, base_kb: int = 128,
+            cache_kb: int = 0, pin_l0_kb: int = 0,
+            cache_policy: str = "clock") -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
-    container-scale datasets so the tree reaches realistic depths (L=4..9)."""
+    container-scale datasets so the tree reaches realistic depths (L=4..9).
+    ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9)."""
     return LSMStore(LSMConfig(
         policy=policy, c=c, T=T,
         memtable_bytes=memtable_kb << 10,
         base_level_bytes=base_kb << 10,
         bits_per_key=bits_per_key,
-        bloom_allocation=bloom_allocation))
+        bloom_allocation=bloom_allocation,
+        cache_bytes=cache_kb << 10,
+        pin_l0_bytes=pin_l0_kb << 10,
+        cache_policy=cache_policy))
+
+
+def cache_hit_pct(delta) -> float:
+    """Block-cache hit rate (%) over an ``IOStats`` delta window."""
+    touched = delta.cache_hit_blocks + delta.cache_miss_blocks
+    return 100.0 * delta.cache_hit_blocks / touched if touched else 0.0
 
 
 def fill_random(db: LSMStore, n: int, value_size: int, seed: int = 1,

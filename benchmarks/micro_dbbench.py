@@ -6,16 +6,30 @@ point reads, §4.2.1).  Reports us/op wall time and block-I/O counts, plus the
 batched read subsystem (DESIGN.md §3): ``multi_get`` vs the scalar ``get``
 loop and the streaming ``MergingIterator`` scan vs the reference seek-retry
 ``scan_scalar`` loop, with their speedups.
+
+Memory-subsystem lane (DESIGN.md §9): after the uncached measurements the
+same filled tree gets a block cache + pinned L0 attached
+(``LSMStore.configure_cache``) and the point and range reads are each
+re-run — one cold pass to warm the cache, one measured warm pass —
+reporting the cached us/op, the block-cache hit rate over both warm lanes,
+and the warm point-read blocks/op against the uncached
+``point_blocks_per_op`` (cached-vs-uncached read cost).
+
+``--smoke`` runs a seconds-scale configuration exercising every column
+(CI uses it to keep the benchmark code paths green on every PR).
 """
 from __future__ import annotations
 
+import argparse
 from typing import Dict, List
 
-from .common import (DEFAULT_N, fill_random, fill_seq, make_db,
+from .common import (DEFAULT_N, cache_hit_pct, fill_random, fill_seq, make_db,
                      multiget_random, read_random, scan_random, seek_random)
 
 VALUE_SIZES = (50, 100, 200)   # Zippy/UP2X, UDB/VAR, APP/ETC (paper §4.2.1)
 SCAN_LEN = 100                 # entries per iterator scan (db_bench seek+next)
+CACHE_KB = 2048                # block-cache budget for the cached lane
+PIN_L0_KB = 256                # DRAM-resident L0 budget
 
 
 def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
@@ -42,6 +56,16 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
                                         scalar=True)
             t_scan_iter = scan_random(db, n_scans, key_space, SCAN_LEN,
                                       scalar=False)
+            # ---- memory-subsystem lane: same tree, cache attached ----
+            db.configure_cache(CACHE_KB << 10, PIN_L0_KB << 10)
+            read_random(db, n_reads, key_space)            # cold passes warm
+            scan_random(db, n_scans, key_space, SCAN_LEN)  # the cache
+            s0 = db.stats.snapshot()
+            t_read_cached = read_random(db, n_reads, key_space)
+            d_read_cached = db.stats.delta(s0)
+            t_scan_cached = scan_random(db, n_scans, key_space, SCAN_LEN,
+                                        scalar=False)
+            d_cached = db.stats.delta(s0)  # hit rate over both warm lanes
             rows.append(dict(
                 system=name, value_size=vs, levels=db.num_levels_in_use,
                 fillseq_us=t_fillseq, fillrandom_us=t_fillrand,
@@ -53,6 +77,10 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
                 iterscan100_us=t_scan_iter,
                 iterscan_speedup=(t_scan_scalar / t_scan_iter
                                   if t_scan_iter else 0.0),
+                readcached_us=t_read_cached,
+                scancached100_us=t_scan_cached,
+                cachehit_pct=cache_hit_pct(d_cached),
+                cached_blocks_per_op=d_read_cached.blocks_read / n_reads,
                 write_amp=db.stats.write_amplification(),
                 point_blocks_per_op=d_read.blocks_read / n_reads,
                 seek_blocks_per_op=d_seek.blocks_read / n_reads,
@@ -60,12 +88,13 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
     return rows
 
 
-def main(n: int = DEFAULT_N):
-    rows = run(n)
+def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES):
+    rows = run(n, value_sizes)
     hdr = ("system,value_size,levels,fillseq_us,fillrandom_us,readrandom_us,"
            "seekrandom_us,seeknext10_us,seeknext100_us,multiget_us,"
            "multiget_speedup,scanscalar100_us,iterscan100_us,"
-           "iterscan_speedup,write_amp,point_blocks,seek_blocks")
+           "iterscan_speedup,readcached_us,scancached100_us,cachehit_pct,"
+           "cached_blocks,write_amp,point_blocks,seek_blocks")
     print(hdr)
     for r in rows:
         print(f"{r['system']},{r['value_size']},{r['levels']},"
@@ -75,10 +104,21 @@ def main(n: int = DEFAULT_N):
               f"{r['multiget_us']:.2f},{r['multiget_speedup']:.1f},"
               f"{r['scanscalar100_us']:.2f},{r['iterscan100_us']:.2f},"
               f"{r['iterscan_speedup']:.1f},"
+              f"{r['readcached_us']:.2f},{r['scancached100_us']:.2f},"
+              f"{r['cachehit_pct']:.1f},{r['cached_blocks_per_op']:.3f},"
               f"{r['write_amp']:.2f},{r['point_blocks_per_op']:.3f},"
               f"{r['seek_blocks_per_op']:.3f}")
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("-n", type=int, default=DEFAULT_N,
+                    help="entries to load per configuration")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run covering every column")
+    args = ap.parse_args()
+    if args.smoke:
+        main(n=5_000, value_sizes=(50,))
+    else:
+        main(n=args.n)

@@ -4,6 +4,13 @@ Load + six workloads with zipfian (0.99) key selection, comparing RocksDB
 (Leveling) vs Autumn c=.8 vs Autumn c=.4, reporting throughput (kops/s),
 avg/p95/p99 read latencies, write stalls, and space amplification — the
 paper's §4.3 metrics at container scale.
+
+Two extra lanes ride on the read-only workload C tree state:
+``Cbatch*`` resolves the same zipfian stream through ``multi_get`` waves
+(numpy probes, then the Pallas bloom kernel route — ``Cbatch_pallas_kops``),
+and the ``autumn(.8)+cache`` system row runs with the memory subsystem
+(block cache + pinned L0, DESIGN.md §9) enabled, reporting its block-cache
+hit rate (``cachehit_pct``) across the whole workload sweep.
 """
 from __future__ import annotations
 
@@ -14,7 +21,7 @@ import numpy as np
 
 from repro.core import LSMStore
 
-from .common import Zipfian, fnv_scramble, make_db, pct
+from .common import Zipfian, cache_hit_pct, fnv_scramble, make_db, pct
 
 VALUE = 256   # scaled from the paper's 1 KB
 
@@ -104,15 +111,24 @@ WORKLOADS = {
 }
 
 
+SYSTEMS = (  # (name, c, cache_kb, pin_l0_kb)
+    ("rocksdb", 1.0, 0, 0),
+    ("autumn(.8)", 0.8, 0, 0),
+    ("autumn(.4)", 0.4, 0, 0),
+    ("autumn(.8)+cache", 0.8, 1024, 128),
+)
+
+
 def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
     rows = []
-    for name, c in (("rocksdb", 1.0), ("autumn(.8)", 0.8),
-                    ("autumn(.4)", 0.4)):
-        db = make_db(c=c, T=5.0, bits_per_key=10, bloom_allocation="monkey")
+    for name, c, cache_kb, pin_l0_kb in SYSTEMS:
+        db = make_db(c=c, T=5.0, bits_per_key=10, bloom_allocation="monkey",
+                     cache_kb=cache_kb, pin_l0_kb=pin_l0_kb)
         load = _load(db, n)
         row = dict(system=name, load_kops=load["kops"],
                    stalls=load["stalls"], levels=db.num_levels_in_use,
                    space_amp=db.space_amplification())
+        s_sweep = db.stats.snapshot()
         for w, kw in WORKLOADS.items():
             ops = n_ops if w != "E" else max(n_ops // 8, 500)
             m = _mix(db, n, ops, **kw)
@@ -128,6 +144,13 @@ def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
                 row["Cbatch_kops"] = mb["kops"]
                 row["Cbatch_speedup"] = (mb["kops"] / m["kops"]
                                          if m["kops"] else 0.0)
+                # same stream again through the Pallas bloom-probe route
+                # (falls back to numpy when jax is unavailable)
+                db.config.use_pallas_bloom = True
+                row["Cbatch_pallas_kops"] = _mix_batched_reads(
+                    db, n, n_ops)["kops"]
+                db.config.use_pallas_bloom = False
+        row["cachehit_pct"] = cache_hit_pct(db.stats.delta(s_sweep))
         rows.append(row)
     return rows
 

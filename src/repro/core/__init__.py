@@ -5,11 +5,13 @@ Public API:
     LSMStore, LSMConfig           — the storage engine
     make_policy, Garnering, ...   — merge policies (paper §2.3/§3.1)
     BloomFilter, allocate_fprs    — Monkey/Autumn filter allocation (Eq. 7-10)
+    BlockCache, PinnedLevelManager— memory subsystem: block cache + DRAM L0
     IOStats                       — block-I/O cost accounting
 """
 from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
                     garnering_theoretical_fprs, theoretical_fpr,
                     zero_result_read_cost)
+from .cache import BlockCache, PinnedLevelManager
 from .engine import LSMConfig, LSMStore
 from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
@@ -20,7 +22,8 @@ from .run import SortedRun, build_run, merge_runs
 from .types import BLOCK_SIZE, KEY_BYTES, IOStats
 
 __all__ = [
-    "LSMStore", "LSMConfig", "IOStats", "BloomFilter", "allocate_fprs",
+    "LSMStore", "LSMConfig", "IOStats", "BlockCache", "PinnedLevelManager",
+    "BloomFilter", "allocate_fprs",
     "bits_for_fpr", "theoretical_fpr", "garnering_theoretical_fprs",
     "zero_result_read_cost", "MergingIterator", "Manifest", "RunStorage",
     "Version", "Memtable",

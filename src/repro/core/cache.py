@@ -1,0 +1,221 @@
+"""Block cache + DRAM-pinned L0: the engine's memory-management subsystem.
+
+The paper's second headline idea (beyond the Garnering merge policy) is that a
+*small bounded amount of DRAM* can absorb most of the read cost of the upper
+tree: the first level is kept memory-resident, and a shared block cache serves
+the hot tail of the deeper levels (PAPER.md, "bounded space of DRAM").  This
+module is that subsystem:
+
+``BlockCache``
+    A charged-bytes cache of ``(run_id, block_id)`` entries with two eviction
+    policies — ``"lru"`` (exact recency order) and ``"clock"`` (second-chance:
+    a hit sets a reference bit; the eviction hand clears bits until it finds a
+    cold entry, approximating LRU at O(1) per touch).  Every block read in the
+    engine flows through :meth:`read_block`, which either records a hit
+    (``IOStats.cache_hit_blocks``; no block I/O charged) or a miss
+    (``IOStats.cache_miss_blocks`` + ``blocks_read``) and admits the block.
+
+``PinnedLevelManager``
+    Keeps level-0 runs *resident*: after every flush/compaction commit it
+    re-derives the pin set from the current L0, newest run first, admitting
+    whole runs while they fit in ``pin_l0_bytes``.  Pinned blocks live outside
+    the eviction order (they can never be evicted by capacity pressure) and
+    are charged to the pin budget, not ``cache_bytes`` — total DRAM use is
+    bounded by ``cache_bytes + pin_l0_bytes``.  Pinning on the flush path
+    charges no read I/O (a freshly flushed run is already in memory; its
+    write cost is counted by ``blocks_written`` at flush), but repinning on
+    recovery or on a mid-life cache attach charges a miss + block read per
+    block — those loads are real device reads.
+
+Invalidation protocol (DESIGN.md §9): cached blocks are keyed by immutable run
+id, so a run's cached blocks can never go stale — compaction *replaces* runs
+rather than mutating them.  After each manifest commit the engine calls
+:meth:`BlockCache.retain` with the ids still live in ``RunStorage`` (current
+version + snapshot-pinned versions), dropping blocks of dead runs, then
+``PinnedLevelManager.repin`` with the new L0.  A run that leaves L0 loses its
+pinned status but may re-enter the cache on demand like any other run.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from .types import IOStats
+
+CacheKey = Tuple[int, int]  # (run_id, block_id)
+
+
+class BlockCache:
+    """Charged-bytes block cache with LRU or CLOCK (second-chance) eviction."""
+
+    def __init__(self, capacity_bytes: int, policy: str = "clock"):
+        if policy not in ("lru", "clock"):
+            raise ValueError(f"unknown cache policy {policy!r}")
+        self.capacity_bytes = int(capacity_bytes)
+        self.policy = policy
+        # Eviction order: front = next eviction candidate. CLOCK entries carry
+        # a reference bit; the "hand" is the front of the same ordered dict
+        # (a second chance moves the entry to the back with its bit cleared).
+        self._entries: "OrderedDict[CacheKey, List[int]]" = OrderedDict()
+        self._pinned: Dict[CacheKey, int] = {}  # key -> nbytes (L0 residency)
+        self._bytes = 0          # charged bytes, evictable entries only
+        self._pinned_bytes = 0   # charged bytes, pinned entries
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    # -------------------------------------------------------------- accounting
+    @property
+    def charged_bytes(self) -> int:
+        return self._bytes
+
+    @property
+    def pinned_bytes(self) -> int:
+        return self._pinned_bytes
+
+    def __len__(self) -> int:
+        return len(self._entries) + len(self._pinned)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return key in self._pinned or key in self._entries
+
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+    # ------------------------------------------------------------------- reads
+    def read_block(self, run_id: int, block_id: int, nbytes: int,
+                   stats: IOStats) -> bool:
+        """Account one block read through the cache.
+
+        Returns True on a hit (no block I/O charged).  On a miss the block is
+        charged to ``stats.blocks_read`` — the same charge the uncached path
+        makes — and admitted, evicting cold entries to stay within
+        ``capacity_bytes``.
+        """
+        key = (run_id, block_id)
+        if key in self._pinned:
+            self.hits += 1
+            stats.cache_hit_blocks += 1
+            return True
+        e = self._entries.get(key)
+        if e is not None:
+            self.hits += 1
+            stats.cache_hit_blocks += 1
+            if self.policy == "lru":
+                self._entries.move_to_end(key)
+            else:
+                e[1] = 1  # clock reference bit
+            return True
+        self.misses += 1
+        stats.cache_miss_blocks += 1
+        stats.blocks_read += 1
+        self._admit(key, nbytes)
+        return False
+
+    # -------------------------------------------------------------- admission
+    def _admit(self, key: CacheKey, nbytes: int) -> None:
+        nbytes = int(nbytes)
+        if nbytes <= 0 or nbytes > self.capacity_bytes:
+            return  # uncacheable (oversized block, or cache disabled)
+        while self._bytes + nbytes > self.capacity_bytes and self._entries:
+            self._evict_one()
+        self._entries[key] = [nbytes, 0]
+        self._bytes += nbytes
+
+    def _evict_one(self) -> None:
+        if self.policy == "lru":
+            _, (nb, _) = self._entries.popitem(last=False)
+            self._bytes -= nb
+            self.evictions += 1
+            return
+        # CLOCK: sweep from the hand, granting second chances to hot entries.
+        while True:
+            key, e = next(iter(self._entries.items()))
+            if e[1]:
+                e[1] = 0
+                self._entries.move_to_end(key)
+            else:
+                del self._entries[key]
+                self._bytes -= e[0]
+                self.evictions += 1
+                return
+
+    # ------------------------------------------------------------- pin control
+    def set_pinned(self, blocks: Dict[CacheKey, int]) -> None:
+        """Replace the pinned set (the DRAM-resident L0) wholesale.
+
+        Newly pinned blocks are removed from the evictable order (their bytes
+        move from the cache budget to the pin budget); blocks leaving the set
+        simply lose residency and re-enter the cache on demand.
+        """
+        self._pinned = dict(blocks)
+        self._pinned_bytes = sum(self._pinned.values())
+        for key in self._pinned:
+            e = self._entries.pop(key, None)
+            if e is not None:
+                self._bytes -= e[0]
+
+    # ------------------------------------------------------------ invalidation
+    def retain(self, live_run_ids: Iterable[int]) -> None:
+        """Drop every cached block belonging to a run that no longer exists."""
+        live = set(live_run_ids)
+        dead = [k for k in self._entries if k[0] not in live]
+        for k in dead:
+            self._bytes -= self._entries.pop(k)[0]
+        dead_p = [k for k in self._pinned if k[0] not in live]
+        for k in dead_p:
+            self._pinned_bytes -= self._pinned.pop(k)
+
+    def clear(self) -> None:
+        """Drop everything (process restart: DRAM contents are volatile)."""
+        self._entries.clear()
+        self._pinned.clear()
+        self._bytes = 0
+        self._pinned_bytes = 0
+
+
+class PinnedLevelManager:
+    """Keeps L0 runs resident in the block cache within ``pin_l0_bytes``."""
+
+    def __init__(self, cache: BlockCache, pin_l0_bytes: int):
+        self.cache = cache
+        self.pin_l0_bytes = int(pin_l0_bytes)
+        self.pinned_run_ids: List[int] = []
+
+    def repin(self, l0_runs: Sequence,
+              stats: Optional[IOStats] = None) -> None:
+        """Re-derive the pin set from the current L0 (newest run first).
+
+        Whole runs are admitted while they fit the budget; a run that does not
+        fit is skipped (a smaller, older run may still fit).  Engine keeps L0
+        newest-last, so iteration is reversed.
+
+        ``stats=None`` (the flush/compaction path) pins for free: the runs
+        were just built in memory and their write cost was counted at flush.
+        Passing ``stats`` (recovery, or attaching a cache to a live store)
+        charges one miss + block read for every pinned block not already
+        cached — on a block device those blocks must be read to repopulate
+        DRAM.
+        """
+        budget = self.pin_l0_bytes
+        blocks: Dict[CacheKey, int] = {}
+        pinned_ids: List[int] = []
+        for run in reversed(list(l0_runs)):
+            if len(run) == 0 or run.data_bytes > budget:
+                continue
+            budget -= run.data_bytes
+            pinned_ids.append(run.run_id)
+            for bid in range(run.n_blocks):
+                blocks[(run.run_id, bid)] = run.block_bytes(bid)
+        if stats is not None:
+            for key in blocks:
+                if key not in self.cache:
+                    self.cache.misses += 1  # keep hit_rate() in step with
+                    stats.cache_miss_blocks += 1  # the IOStats accounting
+                    stats.blocks_read += 1
+        self.pinned_run_ids = pinned_ids
+        self.cache.set_pinned(blocks)
+
+    def is_resident(self, run_id: int) -> bool:
+        return run_id in self.pinned_run_ids

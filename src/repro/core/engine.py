@@ -14,6 +14,7 @@ from typing import List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bloom import allocate_fprs, bits_for_fpr
+from .cache import BlockCache, PinnedLevelManager
 from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
 from .memtable import Memtable, WriteAheadLog
@@ -41,6 +42,10 @@ class LSMConfig:
     key_bytes: int = KEY_BYTES
     use_pallas_bloom: bool = False      # route multi_get probes through the
                                         # Pallas kernel (numpy when unavailable)
+    cache_bytes: int = 0                # block cache budget; 0 => no cache
+    pin_l0_bytes: int = 0               # DRAM-resident L0 budget (paper's
+                                        # "bounded space of DRAM"); 0 => none
+    cache_policy: str = "clock"         # "clock" (second-chance) | "lru"
 
 
 class LSMStore:
@@ -58,6 +63,35 @@ class LSMStore:
         self._max_level = 1
         self._seq = 0
         self._pallas_probe_fn = _UNSET  # lazy: resolved on first multi_get
+        self.block_cache: Optional[BlockCache] = None
+        self.pinned_l0: Optional[PinnedLevelManager] = None
+        if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
+            self.configure_cache(self.config.cache_bytes,
+                                 self.config.pin_l0_bytes,
+                                 self.config.cache_policy)
+
+    def configure_cache(self, cache_bytes: int, pin_l0_bytes: int = 0,
+                        policy: Optional[str] = None) -> None:
+        """(Re)build the memory subsystem on a live store.
+
+        Replaces any existing cache (contents are dropped) and immediately
+        repins the current L0 within the new budget.  Passing zeros detaches
+        the cache and reverts every read path to raw block accounting.
+        ``policy=None`` keeps the store's configured ``cache_policy``.
+        """
+        self.config.cache_bytes = int(cache_bytes)
+        self.config.pin_l0_bytes = int(pin_l0_bytes)
+        if policy is not None:
+            self.config.cache_policy = policy
+        policy = self.config.cache_policy
+        if cache_bytes <= 0 and pin_l0_bytes <= 0:
+            self.block_cache = None
+            self.pinned_l0 = None
+            return
+        self.block_cache = BlockCache(cache_bytes, policy)
+        self.pinned_l0 = PinnedLevelManager(self.block_cache, pin_l0_bytes)
+        # attaching mid-life: resident L0 blocks must be loaded (charged)
+        self.pinned_l0.repin(self._levels[0], stats=self.stats)
 
     # ------------------------------------------------------------- writes
     def put(self, key: int, value: bytes):
@@ -136,6 +170,12 @@ class LSMStore:
         self.manifest.commit(self._levels, self._max_level, self._seq, self.stats)
         self.manifest.fsync(self.stats)
         self.manifest.gc()
+        if self.block_cache is not None:
+            # Invalidation protocol (DESIGN.md §9): drop blocks of runs that
+            # compaction retired (snapshot-pinned runs stay live in storage),
+            # then re-derive the DRAM-resident L0 from the new version.
+            self.block_cache.retain(self.storage.ids())
+            self.pinned_l0.repin(self._levels[0])
 
     # -------------------------------------------------------------- bloom
     def _bits_for_level(self, level: int) -> float:
@@ -182,7 +222,8 @@ class LSMStore:
             if len(run) == 0:
                 continue
             self.stats.runs_touched_point += 1
-            found, value, _ = run.point_get(int(key), self.stats, use_bloom)
+            found, value, _ = run.point_get(int(key), self.stats, use_bloom,
+                                            cache=self.block_cache)
             if found:
                 return value
         return None
@@ -240,7 +281,8 @@ class LSMStore:
                 continue
             self.stats.runs_touched_point += int(pending.size)
             found, values = run.point_get_batch(
-                keys_arr[pending], self.stats, use_bloom, probe_fn)
+                keys_arr[pending], self.stats, use_bloom, probe_fn,
+                cache=self.block_cache)
             if found.any():
                 for p in np.nonzero(found)[0]:
                     results[int(pending[p])] = values[int(p)]
@@ -260,7 +302,8 @@ class LSMStore:
             self.stats.seeks += 1
             i = run.seek_idx(int(key))
             if i < len(run):
-                self.stats.blocks_read += 1
+                run._charge_block(run.block_of[i], self.stats,
+                                  self.block_cache)
                 k = int(run.keys[i])
                 if best is None or k < best:
                     best = k
@@ -284,7 +327,7 @@ class LSMStore:
         runs = [r for r in self._runs_newest_first(levels) if len(r)]
         mem = self.memtable if snapshot is None else None
         return MergingIterator(runs, memtable=mem, stats=self.stats,
-                               chunk=chunk)
+                               chunk=chunk, cache=self.block_cache)
 
     def scan(self, start_key: int, count: int,
              snapshot: Optional[Version] = None) -> List[Tuple[int, bytes]]:
@@ -380,13 +423,23 @@ class LSMStore:
 
     # ----------------------------------------------------------- snapshots
     def get_snapshot(self) -> Version:
-        """Pin the current version: snapshot reads stay valid across any
-        number of later flushes/compactions until ``release_snapshot``."""
+        """Acquire a reader reference on the current version.
+
+        Thin wrapper over the manifest's *refcounted* pins: snapshot reads
+        stay valid across any number of later flushes/compactions until the
+        matching ``release_snapshot``; if several readers snapshot the same
+        version, it stays pinned until the last one releases.
+        """
         return self.manifest.pin(self.manifest.current())
 
     def release_snapshot(self, snapshot: Version) -> None:
-        self.manifest.unpin(snapshot.version_id)
+        """Drop one reader reference (see ``get_snapshot``)."""
+        if not self.manifest.unpin(snapshot.version_id):
+            return  # other readers still hold the version: nothing can free
         self.manifest.gc()
+        if self.block_cache is not None:
+            # Runs kept alive only by the released snapshot may be gone now.
+            self.block_cache.retain(self.storage.ids())
 
     # ------------------------------------------------------------ recovery
     def crash(self):
@@ -401,12 +454,31 @@ class LSMStore:
         self._levels = v.runs(self.storage)
         self._max_level = v.max_level
         self._seq = v.last_seq
+        if self.block_cache is not None:
+            # DRAM contents did not survive the crash; reload the pin set
+            # from the recovered L0 (charged — these are real device reads)
+            # while the unpinned cache refills on demand.
+            self.block_cache.clear()
+            self.pinned_l0.repin(self._levels[0], stats=self.stats)
         self.memtable.clear()
         for op, key, seq, value in self.wal.records():
             self._seq = max(self._seq, seq)
             self.memtable.put(key, seq, None if op == 1 else value)
 
     # ---------------------------------------------------------------- info
+    def cache_summary(self) -> dict:
+        """Memory-subsystem health: hit rate, charged bytes, residency."""
+        if self.block_cache is None:
+            return dict(enabled=False, hit_rate=0.0, hits=0, misses=0,
+                        evictions=0, charged_bytes=0, pinned_bytes=0,
+                        pinned_l0_runs=0)
+        c = self.block_cache
+        return dict(enabled=True, hit_rate=c.hit_rate(), hits=c.hits,
+                    misses=c.misses, evictions=c.evictions,
+                    charged_bytes=c.charged_bytes,
+                    pinned_bytes=c.pinned_bytes,
+                    pinned_l0_runs=len(self.pinned_l0.pinned_run_ids))
+
     def level_summary(self) -> List[dict]:
         out = []
         for i, lvl in enumerate(self._levels):

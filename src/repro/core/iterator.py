@@ -29,7 +29,9 @@ I/O cost model: ``seek`` charges every participating run one iterator seek
 (``stats.seeks``/``runs_touched_range``); ``consume`` charges every run the
 data blocks *spanned* by the prefix the merged stream actually consumed from
 it, deduplicated across refills at block granularity — matching
-``SortedRun.blocks_spanned`` on the consumed ranges.
+``SortedRun.blocks_spanned`` on the consumed ranges.  With a block cache
+attached (``core.cache.BlockCache``) every spanned block first consults the
+cache; only misses charge ``blocks_read``.
 """
 from __future__ import annotations
 
@@ -49,11 +51,12 @@ _MAX_WINDOW = 4096
 class _RunCursor:
     """Forward-only position over one immutable run, with block accounting."""
 
-    __slots__ = ("run", "stats", "n", "pos", "_charged")
+    __slots__ = ("run", "stats", "cache", "n", "pos", "_charged")
 
-    def __init__(self, run: SortedRun, stats: IOStats):
+    def __init__(self, run: SortedRun, stats: IOStats, cache=None):
         self.run = run
         self.stats = stats
+        self.cache = cache
         self.n = len(run)
         self.pos = self.n
         self._charged = -1
@@ -73,13 +76,25 @@ class _RunCursor:
         return self.run.keys[i:e], True
 
     def consume(self, cnt: int) -> None:
-        """Advance past ``cnt`` entries, charging the blocks they span."""
+        """Advance past ``cnt`` entries, charging the blocks they span.
+
+        Blocks already charged by an earlier refill are not re-charged; with a
+        block cache attached each newly spanned block is a hit (free) or a
+        miss (charged + admitted) instead of an unconditional read.
+        """
         if cnt <= 0:
             return
         i = self.pos
         bo = self.run.block_of
         b0, b1 = int(bo[i]), int(bo[i + cnt - 1])
-        self.stats.blocks_read += b1 - max(b0 - 1, self._charged)
+        first_new = max(b0, self._charged + 1)
+        if self.cache is None:
+            self.stats.blocks_read += b1 - first_new + 1
+        else:
+            run = self.run
+            for bid in range(first_new, b1 + 1):
+                self.cache.read_block(run.run_id, bid, run.block_bytes(bid),
+                                      self.stats)
         self._charged = b1
         self.pos = i + cnt
 
@@ -96,10 +111,10 @@ class MergingIterator:
     def __init__(self, runs: Sequence[SortedRun],
                  memtable: Optional[Memtable] = None,
                  stats: Optional[IOStats] = None,
-                 chunk: int = _MAX_WINDOW):
+                 chunk: int = _MAX_WINDOW, cache=None):
         self.stats = stats if stats is not None else IOStats()
         self._cursors: List[_RunCursor] = [
-            _RunCursor(r, self.stats) for r in runs if len(r)]
+            _RunCursor(r, self.stats, cache) for r in runs if len(r)]
         self._memtable = memtable
         self._mem_keys = np.zeros(0, dtype=KEY_DTYPE)
         self._mem_items: List[Tuple[int, int, Optional[bytes]]] = []

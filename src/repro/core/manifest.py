@@ -38,6 +38,10 @@ class RunStorage:
     def get(self, run_id: int) -> SortedRun:
         return self._runs[run_id]
 
+    def ids(self) -> List[int]:
+        """Ids of every run still owned (current + snapshot-pinned versions)."""
+        return list(self._runs.keys())
+
     def gc(self, live_ids: Sequence[int]):
         live = set(live_ids)
         for rid in [r for r in self._runs if r not in live]:
@@ -52,6 +56,7 @@ class Manifest:
         self.storage = storage
         self._log: List[Version] = []
         self._pinned: Dict[int, Version] = {}  # long-lived reader snapshots
+        self._pin_refs: Dict[int, int] = {}    # version_id -> reader refcount
         self._synced_upto = 0  # number of durable versions
         self._next_id = 0
         self.commit(levels=[[]], max_level=1, last_seq=0, stats=IOStats())
@@ -80,16 +85,36 @@ class Manifest:
 
     def pin(self, v: Version) -> Version:
         """Pin a version for a long-lived reader: its runs survive GC even
-        after the version leaves the manifest's durable tail."""
+        after the version leaves the manifest's durable tail.
+
+        Pins are *refcounted*: two readers pinning the same version each hold
+        a reference, and the version stays pinned until every reader unpins —
+        long-lived readers can no longer leak a version by releasing a pin
+        another reader still depends on.
+        """
         self._pinned[v.version_id] = v
+        self._pin_refs[v.version_id] = self._pin_refs.get(v.version_id, 0) + 1
         return v
 
-    def unpin(self, version_id: int) -> None:
-        self._pinned.pop(version_id, None)
+    def unpin(self, version_id: int) -> bool:
+        """Drop one reader reference; the version unpins at refcount zero.
+
+        Returns True iff this release actually unpinned the version (callers
+        skip GC work while other readers still hold it)."""
+        refs = self._pin_refs.get(version_id, 0) - 1
+        if refs > 0:
+            self._pin_refs[version_id] = refs
+            return False
+        self._pin_refs.pop(version_id, None)
+        return self._pinned.pop(version_id, None) is not None
+
+    def pin_count(self, version_id: int) -> int:
+        return self._pin_refs.get(version_id, 0)
 
     def crash(self):
         """Lose versions past the fsync watermark (simulated crash)."""
         self._pinned.clear()  # reader pins are process state, not durable
+        self._pin_refs.clear()
         self._log = self._log[: max(self._synced_upto, 1)]
 
     def live_run_ids(self) -> List[int]:

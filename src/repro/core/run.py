@@ -28,12 +28,14 @@ _run_ids = itertools.count()
 
 class SortedRun:
     __slots__ = ("run_id", "keys", "seqs", "vlens", "vals", "block_of",
-                 "fence_keys", "n_blocks", "data_bytes", "bloom", "level_hint")
+                 "fence_keys", "n_blocks", "data_bytes", "block_size",
+                 "bloom", "level_hint")
 
     def __init__(self, keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
                  vals: np.ndarray, bits_per_key: float = 0.0,
                  block_size: int = BLOCK_SIZE, key_bytes: int = KEY_BYTES):
         assert keys.ndim == 1
+        self.block_size = block_size
         self.run_id = next(_run_ids)
         self.keys = np.ascontiguousarray(keys, dtype=KEY_DTYPE)
         self.seqs = np.ascontiguousarray(seqs, dtype=SEQ_DTYPE)
@@ -69,13 +71,31 @@ class SortedRun:
     def max_key(self) -> int:
         return int(self.keys[-1]) if len(self) else 0
 
+    def block_bytes(self, block_id: int) -> int:
+        """Physical bytes stored in one block (the last block may be short)."""
+        if block_id < 0 or block_id >= self.n_blocks:
+            return 0
+        if block_id == self.n_blocks - 1:
+            return self.data_bytes - block_id * self.block_size
+        return self.block_size
+
+    def _charge_block(self, block_id: int, stats: IOStats, cache) -> None:
+        """One block touch: through the cache when present, else raw I/O."""
+        if cache is None:
+            stats.blocks_read += 1
+        else:
+            cache.read_block(self.run_id, int(block_id),
+                             self.block_bytes(int(block_id)), stats)
+
     # ----------------------------------------------------------------- reads
     def point_get(self, key: int, stats: IOStats,
-                  use_bloom: bool = True) -> Tuple[bool, Optional[bytes], int]:
+                  use_bloom: bool = True,
+                  cache=None) -> Tuple[bool, Optional[bytes], int]:
         """Returns (found, value_or_None_if_tombstone, seq).
 
         Cost model: one bloom probe (CPU), then one block read iff the bloom
-        says maybe (fence pointers locate the block for free).
+        says maybe (fence pointers locate the block for free; the read goes
+        through ``cache`` when one is attached — hits charge no block I/O).
         """
         k = np.uint64(key)
         if use_bloom and self.bloom.k > 0:
@@ -83,8 +103,11 @@ class SortedRun:
             if not bool(self.bloom.may_contain(np.asarray([k]))[0]):
                 stats.bloom_negatives += 1
                 return False, None, -1
-        stats.blocks_read += 1  # fence pointers give the unique candidate block
+        if len(self) == 0:
+            return False, None, -1  # no blocks to read
         i = int(np.searchsorted(self.keys, k))
+        # fence pointers give the unique candidate block
+        self._charge_block(self.block_of[min(i, len(self) - 1)], stats, cache)
         if i < len(self) and self.keys[i] == k:
             vlen = int(self.vlens[i])
             if vlen == TOMBSTONE_LEN:
@@ -94,7 +117,7 @@ class SortedRun:
         return False, None, -1
 
     def point_get_batch(self, keys: np.ndarray, stats: IOStats,
-                        use_bloom: bool = True, probe_fn=None
+                        use_bloom: bool = True, probe_fn=None, cache=None
                         ) -> Tuple[np.ndarray, List[Optional[bytes]]]:
         """Vectorized ``point_get`` over a batch of keys.
 
@@ -103,12 +126,16 @@ class SortedRun:
         tombstone).  One bloom pass + one searchsorted over the whole batch;
         aggregate IOStats accounting is identical to len(keys) scalar
         ``point_get`` calls.  ``probe_fn(bloom, keys) -> bool mask`` optionally
-        reroutes the filter probe (e.g. through the Pallas kernel).
+        reroutes the filter probe (e.g. through the Pallas kernel); ``cache``
+        routes the candidate block reads through the block cache, in batch
+        order (so two candidates sharing a block cost one miss + one hit).
         """
         keys = np.ascontiguousarray(keys, dtype=KEY_DTYPE)
         n = keys.size
         found = np.zeros(n, dtype=bool)
         values: List[Optional[bytes]] = [None] * n
+        if len(self) == 0:
+            return found, values  # no blocks to read
         if use_bloom and self.bloom.k > 0:
             stats.bloom_probes += n
             if probe_fn is not None:
@@ -122,8 +149,12 @@ class SortedRun:
         if cand.size == 0:
             return found, values
         # Fence pointers give each candidate its unique block: 1 read apiece.
-        stats.blocks_read += int(cand.size)
         idx = np.searchsorted(self.keys, keys[cand])
+        if cache is None:
+            stats.blocks_read += int(cand.size)
+        else:
+            for bid in self.block_of[np.minimum(idx, len(self) - 1)]:
+                self._charge_block(bid, stats, cache)
         inb = idx < len(self)
         hit = np.zeros(cand.size, dtype=bool)
         hit[inb] = self.keys[idx[inb]] == keys[cand][inb]

@@ -32,6 +32,8 @@ class IOStats:
 
     blocks_read: int = 0          # data blocks touched by reads
     blocks_written: int = 0       # data blocks written by flush/compaction
+    cache_hit_blocks: int = 0     # block reads served by the BlockCache
+    cache_miss_blocks: int = 0    # block reads that missed the cache (charged)
     seeks: int = 0                # iterator seek operations (1 per run touched)
     bloom_probes: int = 0         # CPU cost proxy (paper §3.1 CPU Optimization)
     bloom_negatives: int = 0      # probes answered "definitely absent"

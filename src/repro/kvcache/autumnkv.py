@@ -152,7 +152,10 @@ class AutumnKVCache:
         self.db = LSMStore(lsm_config or LSMConfig(
             policy="garnering", T=2.0, c=0.8, memtable_bytes=1 << 20,
             base_level_bytes=8 << 20, bits_per_key=10,
-            bloom_allocation="monkey"))
+            bloom_allocation="monkey",
+            # memory subsystem (DESIGN.md §9): hot page blocks served from
+            # DRAM, L0 pinned so fresh inserts are always resident
+            cache_bytes=4 << 20, pin_l0_bytes=2 << 20))
         self.hits = 0
         self.misses = 0
         self.pages_written = 0
@@ -238,6 +241,7 @@ class AutumnKVCache:
                     pages_written=self.pages_written,
                     pages_deduped=self.pages_deduped,
                     levels=self.db.num_levels_in_use,
+                    block_cache=self.db.cache_summary(),
                     io=dataclass_asdict(self.db.stats))
 
 

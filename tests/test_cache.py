@@ -1,0 +1,351 @@
+"""Memory subsystem tests: BlockCache, pinned L0, and cache accounting.
+
+Property tests (shim-compatible, see ``_hypothesis_compat``) pin down:
+
+  * LRU eviction order against a reference model, CLOCK invariants
+    (capacity, second chance, byte accounting);
+  * pinned-L0 residency across flushes and compactions, including the
+    invalidation protocol (no cached block may outlive its run);
+  * ``IOStats`` hit/miss accounting: on a read-only window,
+    ``blocks_read == cache_miss_blocks`` and ``hits + misses`` equals the
+    block charge of an identically built cache-less store;
+  * the ISSUE acceptance criterion: with ``pin_l0_bytes`` sized to hold L0,
+    a compacted store answers point/range reads with ``cache_hit_blocks > 0``
+    and strictly fewer charged ``blocks_read`` than the cache-disabled
+    configuration, returning identical values (differential vs scalar
+    ``get`` / ``scan_scalar``).
+"""
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BlockCache, LSMConfig, LSMStore
+from repro.core.types import IOStats
+
+
+def make_db(cache_bytes=0, pin_l0_bytes=0, policy="clock", **kw):
+    base = dict(policy="garnering", c=0.8, T=2.0, memtable_bytes=1 << 11,
+                base_level_bytes=1 << 13, bits_per_key=8,
+                bloom_allocation="monkey", cache_bytes=cache_bytes,
+                pin_l0_bytes=pin_l0_bytes, cache_policy=policy)
+    base.update(kw)
+    return LSMStore(LSMConfig(**base))
+
+
+def fill(db, seed, n_ops=1200, key_space=300):
+    rng = np.random.default_rng(seed)
+    oracle = {}
+    for i in range(n_ops):
+        k = int(rng.integers(0, key_space))
+        if rng.random() < 0.15:
+            db.delete(k)
+            oracle.pop(k, None)
+        else:
+            v = f"s{seed}i{i}".encode()
+            db.put(k, v)
+            oracle[k] = v
+    db.flush()
+    return oracle
+
+
+# --------------------------------------------------------------- BlockCache
+BLOCK_NBYTES = 512
+
+
+@settings(max_examples=40)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(0, 15)),
+                min_size=0, max_size=120),
+       st.integers(1, 12))
+def test_lru_eviction_order_matches_reference_model(accesses, cap_blocks):
+    """LRU contents after any access sequence == an OrderedDict LRU model."""
+    cache = BlockCache(cap_blocks * BLOCK_NBYTES, policy="lru")
+    model = OrderedDict()
+    stats = IOStats()
+    for rid, bid in accesses:
+        hit = cache.read_block(rid, bid, BLOCK_NBYTES, stats)
+        assert hit == ((rid, bid) in model)
+        if (rid, bid) in model:
+            model.move_to_end((rid, bid))
+        else:
+            while len(model) >= cap_blocks:
+                model.popitem(last=False)
+            model[(rid, bid)] = True
+    assert set(cache._entries) == set(model)
+    assert list(cache._entries) == list(model)  # exact recency order
+    assert cache.charged_bytes == len(model) * BLOCK_NBYTES
+    assert stats.cache_hit_blocks == cache.hits
+    assert stats.cache_miss_blocks == cache.misses == stats.blocks_read
+
+
+@settings(max_examples=40)
+@given(st.lists(st.integers(0, 25), min_size=0, max_size=150),
+       st.integers(1, 10),
+       st.sampled_from(["clock", "lru"]))
+def test_cache_capacity_and_accounting_invariants(blocks, cap_blocks, policy):
+    """Any policy: bytes bound respected, hits+misses == accesses, and the
+    charged byte count always equals the sum of resident entry sizes."""
+    cache = BlockCache(cap_blocks * BLOCK_NBYTES, policy=policy)
+    stats = IOStats()
+    for bid in blocks:
+        cache.read_block(0, bid, BLOCK_NBYTES, stats)
+        assert cache.charged_bytes <= cache.capacity_bytes
+        assert cache.charged_bytes == sum(
+            e[0] for e in cache._entries.values())
+    assert cache.hits + cache.misses == len(blocks)
+    assert cache.misses == stats.blocks_read
+    assert cache.misses - cache.evictions == len(cache._entries)
+
+
+def test_clock_gives_hot_entry_a_second_chance():
+    """A re-referenced block survives a full eviction sweep; under plain FIFO
+    (no ref bit) it would have been the first to go."""
+    cache = BlockCache(4 * BLOCK_NBYTES, policy="clock")
+    stats = IOStats()
+    for bid in range(4):
+        cache.read_block(0, bid, BLOCK_NBYTES, stats)   # fill: 0 oldest
+    cache.read_block(0, 0, BLOCK_NBYTES, stats)         # set 0's ref bit
+    for bid in range(4, 7):
+        cache.read_block(0, bid, BLOCK_NBYTES, stats)   # force 3 evictions
+    assert (0, 0) in cache                              # second chance
+    assert (0, 1) not in cache and (0, 2) not in cache  # cold ones evicted
+
+
+def test_pinned_blocks_never_evicted_by_pressure():
+    cache = BlockCache(2 * BLOCK_NBYTES, policy="clock")
+    stats = IOStats()
+    cache.set_pinned({(99, 0): BLOCK_NBYTES, (99, 1): BLOCK_NBYTES})
+    for bid in range(20):
+        cache.read_block(0, bid, BLOCK_NBYTES, stats)
+    assert (99, 0) in cache and (99, 1) in cache
+    assert cache.pinned_bytes == 2 * BLOCK_NBYTES
+    assert cache.charged_bytes <= cache.capacity_bytes
+    # pinned reads are hits and charge no block I/O
+    s = IOStats()
+    assert cache.read_block(99, 0, BLOCK_NBYTES, s)
+    assert s.cache_hit_blocks == 1 and s.blocks_read == 0
+
+
+# ------------------------------------------------------- pinned L0 residency
+@settings(max_examples=8)
+@given(st.integers(1, 5), st.sampled_from(["clock", "lru"]))
+def test_pinned_l0_residency_across_flush_and_compaction(seed, policy):
+    """After every flush/compaction, exactly the L0 runs that fit the pin
+    budget are resident, and no cached block references a dead run."""
+    db = make_db(cache_bytes=1 << 16, pin_l0_bytes=1 << 20, policy=policy)
+    rng = np.random.default_rng(seed)
+    for i in range(900):
+        db.put(int(rng.integers(0, 200)), f"x{i}".encode())
+        if i % 90 == 89:
+            db.flush()
+            l0_ids = [r.run_id for r in db._levels[0]]
+            assert sorted(db.pinned_l0.pinned_run_ids) == sorted(l0_ids)
+            live = set(db.storage.ids())
+            for rid, _ in list(db.block_cache._entries) + \
+                    list(db.block_cache._pinned):
+                assert rid in live
+            # every L0 block answers from DRAM: hit, no I/O charge
+            for run in db._levels[0]:
+                s = IOStats()
+                assert db.block_cache.read_block(
+                    run.run_id, 0, run.block_bytes(0), s)
+                assert s.blocks_read == 0
+    # pinned bytes never exceed the budget
+    assert db.block_cache.pinned_bytes <= 1 << 20
+
+
+def test_pin_budget_prefers_newest_runs():
+    """When L0 outgrows pin_l0_bytes, newest runs win the budget."""
+    db = make_db(cache_bytes=1 << 16, pin_l0_bytes=1 << 12,
+                 l0_compaction_trigger=64, l0_stop_writes_trigger=128,
+                 base_level_bytes=1 << 22)
+    for wave in range(6):
+        for k in range(40):
+            db.put(k + 1000 * wave, bytes(40))
+        db.flush()
+    l0 = db._levels[0]
+    assert len(l0) >= 2
+    pinned = set(db.pinned_l0.pinned_run_ids)
+    assert pinned and db.block_cache.pinned_bytes <= 1 << 12
+    # the newest run always gets the first claim on the budget
+    assert l0[-1].run_id in pinned
+    # newest-first greedy: every pinned run fit the budget remaining after
+    # all newer pinned runs were admitted
+    budget = 1 << 12
+    for r in reversed(l0):
+        if r.run_id in pinned:
+            assert r.data_bytes <= budget
+            budget -= r.data_bytes
+
+
+# -------------------------------------------------- IOStats hit/miss algebra
+@settings(max_examples=6)
+@given(st.integers(1, 4), st.sampled_from(["clock", "lru"]))
+def test_hit_miss_accounting_vs_uncached_twin(seed, policy):
+    """Identically built stores: on a read-only window the cached store's
+    ``hits + misses`` equals the uncached store's ``blocks_read``, and its
+    charged ``blocks_read`` equals its misses exactly."""
+    db_u = make_db()
+    db_c = make_db(cache_bytes=1 << 22, pin_l0_bytes=1 << 20, policy=policy)
+    oracle = fill(db_u, seed)
+    assert fill(db_c, seed) == oracle
+    queries = list(np.random.default_rng(seed).integers(0, 350, 250))
+    s_u = db_u.stats.snapshot()
+    s_c = db_c.stats.snapshot()
+    got_u = [db_u.get(int(k)) for k in queries]
+    got_c = [db_c.get(int(k)) for k in queries]
+    assert got_u == got_c == [oracle.get(int(k)) for k in queries]
+    d_u = db_u.stats.delta(s_u)
+    d_c = db_c.stats.delta(s_c)
+    assert d_c.blocks_read == d_c.cache_miss_blocks
+    assert d_c.cache_hit_blocks + d_c.cache_miss_blocks == d_u.blocks_read
+    # CPU-side counters are cache-independent
+    for f in ("bloom_probes", "bloom_negatives", "runs_touched_point",
+              "point_reads"):
+        assert getattr(d_c, f) == getattr(d_u, f), f
+    # scans: same equality on the iterator path
+    s_u = db_u.stats.snapshot()
+    s_c = db_c.stats.snapshot()
+    assert db_u.scan(0, 100) == db_c.scan(0, 100)
+    d_u = db_u.stats.delta(s_u)
+    d_c = db_c.stats.delta(s_c)
+    assert d_c.blocks_read == d_c.cache_miss_blocks
+    assert d_c.cache_hit_blocks + d_c.cache_miss_blocks == d_u.blocks_read
+
+
+def test_multi_get_cached_matches_scalar_results():
+    """multi_get through the cache returns scalar-get results; its block
+    *touches* (hits+misses) match the scalar pass touch-for-touch when the
+    cache is large enough that no eviction interleaves."""
+    db = make_db(cache_bytes=1 << 22, pin_l0_bytes=1 << 20)
+    oracle = fill(db, seed=9)
+    queries = list(np.random.default_rng(2).integers(0, 350, 300)) + [5, 5]
+    scalar = [db.get(int(k)) for k in queries]
+    s0 = db.stats.snapshot()
+    batch = db.multi_get(queries)
+    d = db.stats.delta(s0)
+    assert batch == scalar == [oracle.get(int(k)) for k in queries]
+    # warmed cache + ample capacity: the batched pass re-touches the same
+    # blocks, all hits
+    assert d.cache_miss_blocks == 0 and d.blocks_read == 0
+    assert d.cache_hit_blocks > 0
+
+
+# ------------------------------------------------------ acceptance criterion
+@pytest.mark.parametrize("policy", ["clock", "lru"])
+def test_cached_reads_cheaper_identical_results(policy):
+    """ISSUE acceptance: pin_l0_bytes sized to hold L0 => point/range reads
+    over a compacted store report cache_hit_blocks > 0 and strictly fewer
+    charged blocks_read than the cache-disabled config, identical values."""
+    db_off = make_db()
+    db_on = make_db(cache_bytes=1 << 21, pin_l0_bytes=1 << 21, policy=policy)
+    oracle = fill(db_off, seed=3, n_ops=2500)
+    assert fill(db_on, seed=3, n_ops=2500) == oracle
+    assert db_on.stats.compactions > 0        # compacted store
+    queries = list(np.random.default_rng(4).integers(0, 400, 500))
+    expect = [oracle.get(int(k)) for k in queries]
+    # oracle passes first, OUTSIDE the measured windows, so the two windows
+    # below contain exactly the same operations on both stores
+    wants = {start: db_off.scan_scalar(start, 60) for start in (0, 100, 333)}
+    s_off = db_off.stats.snapshot()
+    s_on = db_on.stats.snapshot()
+    assert [db_off.get(int(k)) for k in queries] == expect
+    assert [db_on.get(int(k)) for k in queries] == expect
+    for start, want in wants.items():
+        assert db_off.scan(start, 60) == want
+        assert db_on.scan(start, 60) == want
+    d_off = db_off.stats.delta(s_off)
+    d_on = db_on.stats.delta(s_on)
+    assert d_on.cache_hit_blocks > 0
+    assert d_on.blocks_read < d_off.blocks_read
+
+
+def test_configure_cache_on_live_store_and_detach():
+    db = make_db()
+    oracle = fill(db, seed=7)
+    base = [oracle.get(k) for k in range(50)]
+    assert [db.get(k) for k in range(50)] == base
+    db.configure_cache(1 << 20, 1 << 20)
+    assert [db.get(k) for k in range(50)] == base
+    assert db.stats.cache_hit_blocks + db.stats.cache_miss_blocks > 0
+    assert db.cache_summary()["enabled"]
+    db.configure_cache(0, 0)                  # detach: raw accounting again
+    s0 = db.stats.snapshot()
+    assert [db.get(k) for k in range(50)] == base
+    d = db.stats.delta(s0)
+    assert d.cache_hit_blocks == 0 and d.cache_miss_blocks == 0
+    assert d.blocks_read > 0
+
+
+def test_cache_invalidation_on_compaction_and_recover():
+    db = make_db(cache_bytes=1 << 20, pin_l0_bytes=1 << 20)
+    fill(db, seed=11, n_ops=2000)
+    [db.get(k) for k in range(100)]           # populate cache
+    for rid, _ in list(db.block_cache._entries) + list(db.block_cache._pinned):
+        assert rid in set(db.storage.ids())
+    # crash+recover: DRAM is volatile, pin set rebuilt from recovered L0 —
+    # and reloading the resident blocks is charged as real device reads
+    s0 = db.stats.snapshot()
+    db.crash()
+    db.recover()
+    d = db.stats.delta(s0)
+    n_pinned = len(db.block_cache._pinned)
+    assert d.cache_miss_blocks == d.blocks_read == n_pinned
+    assert db.block_cache.charged_bytes == 0
+    assert sorted(db.pinned_l0.pinned_run_ids) == \
+        sorted(r.run_id for r in db._levels[0] if len(r))
+    s0 = db.stats.snapshot()
+    db.get(0)
+    assert db.stats.delta(s0).point_reads == 1
+
+
+# ------------------------------------------------------ snapshot refcounting
+def test_snapshot_refcounting_shared_version():
+    """Two readers pinning one version: the first release must not unpin."""
+    db = make_db()
+    for k in range(60):
+        db.put(k, b"old")
+    db.flush()
+    s1 = db.get_snapshot()
+    s2 = db.get_snapshot()
+    assert s1.version_id == s2.version_id
+    assert db.manifest.pin_count(s1.version_id) == 2
+    for rep in range(20):                     # churn past the manifest tail
+        for k in range(60):
+            db.put(k, f"r{rep}".encode())
+        db.flush()
+    db.release_snapshot(s1)
+    # second reader still holds the version: reads stay valid
+    assert db.manifest.pin_count(s2.version_id) == 1
+    assert db.get(5, snapshot=s2) == b"old"
+    assert db.scan(5, 2, snapshot=s2) == [(5, b"old"), (6, b"old")]
+    db.release_snapshot(s2)
+    assert db.manifest.pin_count(s2.version_id) == 0
+    assert db.get(5) == b"r19"
+    # over-release is harmless (refcount floors at zero)
+    db.release_snapshot(s2)
+    assert db.manifest.pin_count(s2.version_id) == 0
+
+
+def test_snapshot_reads_with_cache_enabled_survive_churn():
+    """Snapshot-pinned runs keep their cached blocks across compactions."""
+    db = make_db(cache_bytes=1 << 20, pin_l0_bytes=1 << 16)
+    for k in range(80):
+        db.put(k, b"snap")
+    db.flush()
+    snap = db.get_snapshot()
+    for rep in range(15):
+        for k in range(80):
+            db.put(k, f"n{rep}".encode())
+        db.flush()
+    assert db.multi_get([1, 2, 3], snapshot=snap) == [b"snap"] * 3
+    live = set(db.storage.ids())
+    for rid, _ in list(db.block_cache._entries):
+        assert rid in live
+    db.release_snapshot(snap)
+    live = set(db.storage.ids())
+    for rid, _ in list(db.block_cache._entries):
+        assert rid in live

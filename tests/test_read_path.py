@@ -198,3 +198,28 @@ def test_multi_get_pallas_route_matches_numpy():
     db.config.use_pallas_bloom = True   # toggling on a live store takes effect
     assert db.multi_get(queries) == expected
     assert expected == [oracle.get(int(k)) for k in queries]
+
+
+def test_pallas_bloom_differential_bit_for_bit_same_batches():
+    """``use_pallas_bloom=True`` (interpret mode) is a bit-for-bit drop-in:
+    on the same key batches the engine returns identical values AND identical
+    filter decisions — every probe/negative/false-positive/block counter in
+    the IOStats delta matches the numpy route exactly."""
+    jax = pytest.importorskip("jax")  # noqa: F841
+    db = make_db("garnering", 0.8, bits_per_key=10)
+    oracle, _, _ = run_workload(db, seed=33, n_ops=1200)
+    db.flush()
+    rng = np.random.default_rng(17)
+    batches = [list(rng.integers(0, 600, sz)) for sz in (1, 63, 64, 257, 500)]
+    s0 = db.stats.snapshot()
+    numpy_results = [db.multi_get(b) for b in batches]
+    d_numpy = db.stats.delta(s0)
+    db.config.use_pallas_bloom = True
+    s1 = db.stats.snapshot()
+    pallas_results = [db.multi_get(b) for b in batches]
+    d_pallas = db.stats.delta(s1)
+    assert pallas_results == numpy_results
+    assert numpy_results == [[oracle.get(int(k)) for k in b] for b in batches]
+    # identical filter decisions => identical accounting, field by field
+    for f in dataclasses.fields(d_numpy):
+        assert getattr(d_numpy, f.name) == getattr(d_pallas, f.name), f.name
