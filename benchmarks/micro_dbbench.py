@@ -15,21 +15,75 @@ reporting the cached us/op, the block-cache hit rate over both warm lanes,
 and the warm point-read blocks/op against the uncached
 ``point_blocks_per_op`` (cached-vs-uncached read cost).
 
-``--smoke`` runs a seconds-scale configuration exercising every column
-(CI uses it to keep the benchmark code paths green on every PR).
+Write-subsystem lane (DESIGN.md §10): the same ``fillrandom`` key stream is
+loaded through ``put_batch`` waves on a fresh tree (``load_batch_kops`` +
+``load_batch_speedup`` over the scalar put loop — identical flush
+boundaries, so the resulting trees are bit-for-bit equal), and the filled
+tree's runs are merged by both compaction paths on the same inputs
+(``compact_mb_s`` for the vectorized ``merge_runs``, ``compact_speedup``
+over the ``merge_runs_scalar`` oracle), asserting identical IOStats and
+bit-identical output along the way.
+
+``--smoke`` runs a seconds-scale configuration exercising every column and
+asserts the write-subsystem columns are present and nonzero (CI uses it to
+keep the benchmark code paths green on every PR).
 """
 from __future__ import annotations
 
 import argparse
+import time
 from typing import Dict, List
 
-from .common import (DEFAULT_N, cache_hit_pct, fill_random, fill_seq, make_db,
-                     multiget_random, read_random, scan_random, seek_random)
+from .common import (DEFAULT_N, cache_hit_pct, fill_random, fill_random_batch,
+                     fill_seq, make_db, multiget_random, read_random,
+                     scan_random, seek_random)
 
 VALUE_SIZES = (50, 100, 200)   # Zippy/UP2X, UDB/VAR, APP/ETC (paper §4.2.1)
 SCAN_LEN = 100                 # entries per iterator scan (db_bench seek+next)
 CACHE_KB = 2048                # block-cache budget for the cached lane
 PIN_L0_KB = 256                # DRAM-resident L0 budget
+
+
+def compact_bench(db) -> Dict[str, float]:
+    """Merge the filled tree's runs with both compaction paths (same inputs).
+
+    Asserts the vectorized ``merge_runs`` is a bit-for-bit drop-in for the
+    ``merge_runs_scalar`` oracle — identical keys/seqs/vlens/vals and
+    identical compaction IOStats — then reports its throughput (input MB/s)
+    and the speedup over the oracle.
+    """
+    import numpy as np
+
+    from repro.core import IOStats
+    from repro.core.run import merge_runs, merge_runs_scalar
+
+    runs = [r for lvl in db._levels for r in lvl if len(r)]
+    if len(runs) < 2:
+        return dict(compact_mb_s=0.0, compact_speedup=0.0)
+    # best-of-3 per path: this container's wall clock is noisy, and min()
+    # is the standard estimator for compute-bound kernels
+    s_ref, s_vec = IOStats(), IOStats()
+    ref = out = None
+    t_ref = t_vec = float("inf")
+    for _ in range(3):
+        s_ref = IOStats()
+        t0 = time.perf_counter()
+        ref = merge_runs_scalar(runs, 0.0, s_ref)
+        t_ref = min(t_ref, time.perf_counter() - t0)
+        s_vec = IOStats()
+        t0 = time.perf_counter()
+        out = merge_runs(runs, 0.0, s_vec)
+        t_vec = min(t_vec, time.perf_counter() - t0)
+    assert np.array_equal(ref.keys, out.keys) and \
+        np.array_equal(ref.seqs, out.seqs) and \
+        np.array_equal(ref.vlens, out.vlens) and \
+        np.array_equal(ref.vals, out.vals), "compaction paths diverged"
+    for f in ("blocks_read", "blocks_written", "entries_compacted",
+              "bytes_compacted", "compactions"):
+        assert getattr(s_ref, f) == getattr(s_vec, f), f
+    in_mb = sum(r.data_bytes for r in runs) / 1e6
+    return dict(compact_mb_s=in_mb / t_vec if t_vec else 0.0,
+                compact_speedup=t_ref / t_vec if t_vec else 0.0)
 
 
 def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
@@ -42,6 +96,11 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
             t_fillseq = fill_seq(db_seq, n, vs)
             db = make_db(c=c)
             t_fillrand = fill_random(db, n, vs)
+            # ---- write-subsystem lane: same stream through put_batch ----
+            db_batch = make_db(c=c)
+            t_fillbatch = fill_random_batch(db_batch, n, vs)
+            assert db_batch.total_entries == db.total_entries
+            compact = compact_bench(db)
             key_space = n * 8
             s0 = db.stats.snapshot()
             t_read = read_random(db, n_reads, key_space)
@@ -69,6 +128,11 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
             rows.append(dict(
                 system=name, value_size=vs, levels=db.num_levels_in_use,
                 fillseq_us=t_fillseq, fillrandom_us=t_fillrand,
+                load_batch_kops=(1e3 / t_fillbatch) if t_fillbatch else 0.0,
+                load_batch_speedup=(t_fillrand / t_fillbatch
+                                    if t_fillbatch else 0.0),
+                compact_mb_s=compact["compact_mb_s"],
+                compact_speedup=compact["compact_speedup"],
                 readrandom_us=t_read, seekrandom_us=t_seek,
                 seeknext10_us=t_next10, seeknext100_us=t_next100,
                 multiget_us=t_multiget,
@@ -88,9 +152,11 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
     return rows
 
 
-def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES):
+def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False):
     rows = run(n, value_sizes)
-    hdr = ("system,value_size,levels,fillseq_us,fillrandom_us,readrandom_us,"
+    hdr = ("system,value_size,levels,fillseq_us,fillrandom_us,"
+           "load_batch_kops,load_batch_speedup,compact_mb_s,compact_speedup,"
+           "readrandom_us,"
            "seekrandom_us,seeknext10_us,seeknext100_us,multiget_us,"
            "multiget_speedup,scanscalar100_us,iterscan100_us,"
            "iterscan_speedup,readcached_us,scancached100_us,cachehit_pct,"
@@ -99,6 +165,8 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES):
     for r in rows:
         print(f"{r['system']},{r['value_size']},{r['levels']},"
               f"{r['fillseq_us']:.2f},{r['fillrandom_us']:.2f},"
+              f"{r['load_batch_kops']:.1f},{r['load_batch_speedup']:.1f},"
+              f"{r['compact_mb_s']:.1f},{r['compact_speedup']:.1f},"
               f"{r['readrandom_us']:.2f},{r['seekrandom_us']:.2f},"
               f"{r['seeknext10_us']:.2f},{r['seeknext100_us']:.2f},"
               f"{r['multiget_us']:.2f},{r['multiget_speedup']:.1f},"
@@ -108,6 +176,13 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES):
               f"{r['cachehit_pct']:.1f},{r['cached_blocks_per_op']:.3f},"
               f"{r['write_amp']:.2f},{r['point_blocks_per_op']:.3f},"
               f"{r['seek_blocks_per_op']:.3f}")
+    if smoke:
+        # CI gate: the write-subsystem columns must be present and nonzero
+        for r in rows:
+            assert r["load_batch_kops"] > 0 and r["load_batch_speedup"] > 0, r
+            assert r["compact_mb_s"] > 0 and r["compact_speedup"] > 0, r
+        print(f"smoke-ok: load_batch {rows[0]['load_batch_speedup']:.1f}x, "
+              f"compaction {rows[0]['compact_speedup']:.1f}x")
     return rows
 
 
@@ -119,6 +194,6 @@ if __name__ == "__main__":
                     help="seconds-scale CI run covering every column")
     args = ap.parse_args()
     if args.smoke:
-        main(n=5_000, value_sizes=(50,))
+        main(n=5_000, value_sizes=(50,), smoke=True)
     else:
         main(n=args.n)

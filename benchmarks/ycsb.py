@@ -3,7 +3,8 @@
 Load + six workloads with zipfian (0.99) key selection, comparing RocksDB
 (Leveling) vs Autumn c=.8 vs Autumn c=.4, reporting throughput (kops/s),
 avg/p95/p99 read latencies, write stalls, and space amplification — the
-paper's §4.3 metrics at container scale.
+paper's §4.3 metrics at container scale.  The load phase runs through the
+batched ingest lane (``put_batch``, DESIGN.md §10).
 
 Two extra lanes ride on the read-only workload C tree state:
 ``Cbatch*`` resolves the same zipfian stream through ``multi_get`` waves
@@ -26,11 +27,14 @@ from .common import Zipfian, cache_hit_pct, fnv_scramble, make_db, pct
 VALUE = 256   # scaled from the paper's 1 KB
 
 
-def _load(db: LSMStore, n: int) -> Dict:
+def _load(db: LSMStore, n: int, batch: int = 4096) -> Dict:
+    """YCSB load phase through the batched ingest lane (``put_batch``
+    waves, DESIGN.md §10) — identical resulting tree to a scalar put loop."""
     val = bytes(VALUE)
+    keys = fnv_scramble(np.arange(n, dtype=np.uint64))
     t0 = time.perf_counter()
-    for k in fnv_scramble(np.arange(n, dtype=np.uint64)):
-        db.put(int(k), val)
+    for i in range(0, n, batch):
+        db.put_batch(keys[i:i + batch].tolist(), val)
     db.flush()
     dt = time.perf_counter() - t0
     return dict(kops=n / dt / 1e3, stalls=db.stats.write_stalls)

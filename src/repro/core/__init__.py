@@ -18,7 +18,7 @@ from .manifest import Manifest, RunStorage, Version
 from .memtable import Memtable, WriteAheadLog
 from .policy import (POLICIES, CompactionTask, Garnering, LazyLeveling,
                      Leveling, MergePolicy, QLSMBush, Tiering, make_policy)
-from .run import SortedRun, build_run, merge_runs
+from .run import SortedRun, build_run, merge_runs, merge_runs_scalar
 from .types import BLOCK_SIZE, KEY_BYTES, IOStats
 
 __all__ = [
@@ -29,5 +29,6 @@ __all__ = [
     "Version", "Memtable",
     "WriteAheadLog", "POLICIES", "CompactionTask", "Garnering", "LazyLeveling",
     "Leveling", "MergePolicy", "QLSMBush", "Tiering", "make_policy",
-    "SortedRun", "build_run", "merge_runs", "BLOCK_SIZE", "KEY_BYTES",
+    "SortedRun", "build_run", "merge_runs", "merge_runs_scalar",
+    "BLOCK_SIZE", "KEY_BYTES",
 ]

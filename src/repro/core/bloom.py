@@ -17,6 +17,7 @@ p_{L-i} = p_L * c^{i(i-1)/2} / T^i.
 from __future__ import annotations
 
 import math
+import sys
 from typing import Optional, Sequence
 
 import numpy as np
@@ -49,6 +50,26 @@ def hash_pair(keys: np.ndarray):
     return h1, h2
 
 
+def build_bits(h1: np.ndarray, h2: np.ndarray, k: int, m_bits: int
+               ) -> np.ndarray:
+    """Construct the uint32-word bitset from hashes in one vectorized pass.
+
+    All ``k * n`` double-hash positions are computed at once, scattered into
+    a boolean bit map (duplicate positions collapse for free), and packed
+    little-endian — the exact word/bit layout ``may_contain`` and the Pallas
+    probe kernel index.  Replaces the k-iteration ``np.bitwise_or.at`` loop,
+    which is unbuffered and dominates compaction's filter-rebuild cost.
+    """
+    ks = np.arange(k, dtype=np.uint32)[:, None]
+    pos = (h1[None, :] + ks * h2[None, :]) % np.uint32(m_bits)
+    bitmap = np.zeros(m_bits, dtype=bool)
+    bitmap[pos.ravel()] = True
+    words = np.packbits(bitmap, bitorder="little").view(np.uint32)
+    if sys.byteorder == "big":   # packed bytes are little-endian words
+        words = words.byteswap()
+    return words
+
+
 class BloomFilter:
     """Standard bloom filter with k = round(bits_per_key * ln2) double hashes.
 
@@ -58,7 +79,11 @@ class BloomFilter:
 
     __slots__ = ("m_bits", "k", "bits", "n_keys")
 
-    def __init__(self, keys: np.ndarray, bits_per_key: float):
+    def __init__(self, keys: np.ndarray, bits_per_key: float, hash_fn=None):
+        """``hash_fn(keys) -> (h1, h2)`` optionally reroutes the hash pass
+        (e.g. ``kernels.ops.bloom_build_hashes``, the engine's
+        ``use_pallas_bloom`` build route); it must stay in bit-lockstep with
+        :func:`hash_pair` so numpy and VPU probes agree on the bitset."""
         n = int(keys.size)
         self.n_keys = n
         if n == 0 or bits_per_key <= 0:
@@ -72,12 +97,9 @@ class BloomFilter:
         m = -(-max(64, int(round(bits_per_key * n))) // 32) * 32
         self.m_bits = m
         self.k = max(1, int(round(bits_per_key * LN2)))
-        self.bits = np.zeros(m // 32, dtype=np.uint32)
-        h1, h2 = hash_pair(np.asarray(keys, dtype=np.uint64))
-        for i in range(self.k):
-            pos = (h1 + np.uint32(i) * h2) % np.uint32(m)
-            np.bitwise_or.at(self.bits, (pos >> np.uint32(5)).astype(np.int64),
-                             np.uint32(1) << (pos & np.uint32(31)))
+        h1, h2 = (hash_fn or hash_pair)(np.asarray(keys, dtype=np.uint64))
+        self.bits = build_bits(np.asarray(h1, dtype=np.uint32),
+                               np.asarray(h2, dtype=np.uint32), self.k, m)
 
     def may_contain(self, keys: np.ndarray) -> np.ndarray:
         """Vectorized membership test. True = maybe present, False = absent."""

@@ -9,7 +9,7 @@ validated empirically.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -40,8 +40,12 @@ class LSMConfig:
     wal_fsync_every_write: bool = False # False => fsync at flush (db default)
     block_size: int = BLOCK_SIZE
     key_bytes: int = KEY_BYTES
-    use_pallas_bloom: bool = False      # route multi_get probes through the
-                                        # Pallas kernel (numpy when unavailable)
+    use_pallas_bloom: bool = False      # route multi_get probes AND filter
+                                        # rebuilds through the Pallas hash
+                                        # family (numpy when unavailable)
+    use_pallas_merge: bool = False      # route compaction's pairwise merges
+                                        # through the bitonic merge-path
+                                        # kernel (numpy when unavailable)
     cache_bytes: int = 0                # block cache budget; 0 => no cache
     pin_l0_bytes: int = 0               # DRAM-resident L0 budget (paper's
                                         # "bounded space of DRAM"); 0 => none
@@ -57,12 +61,16 @@ class LSMStore:
         self.stats = IOStats()
         self.storage = RunStorage()
         self.manifest = Manifest(self.storage)
-        self.memtable = Memtable(self.config.memtable_bytes, self.config.key_bytes)
+        self.memtable = Memtable(self.config.memtable_bytes,
+                                 self.config.key_bytes,
+                                 self.config.block_size)
         self.wal = WriteAheadLog()
         self._levels: List[List[SortedRun]] = [[]]
         self._max_level = 1
         self._seq = 0
         self._pallas_probe_fn = _UNSET  # lazy: resolved on first multi_get
+        self._pallas_hash_fn = _UNSET   # lazy: resolved on first filter build
+        self._pallas_merge_fn = _UNSET  # lazy: resolved on first compaction
         self.block_cache: Optional[BlockCache] = None
         self.pinned_l0: Optional[PinnedLevelManager] = None
         if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
@@ -110,6 +118,72 @@ class LSMStore:
         if self.memtable.is_full():
             self.flush()
 
+    # ------------------------------------------------------- batched writes
+    def put_batch(self, keys, values) -> None:
+        """Batched puts: semantically ``[put(k, v) for k, v in zip(...)]``.
+
+        ``values`` is either a sequence aligned with ``keys`` or a single
+        ``bytes`` broadcast to every key.  See :meth:`write_batch`.
+        """
+        if isinstance(values, (bytes, bytearray)):
+            values = [bytes(values)] * len(keys)
+        self.write_batch(zip(keys, values))
+
+    def delete_batch(self, keys) -> None:
+        """Batched deletes: semantically ``[delete(k) for k in keys]``."""
+        self.write_batch((k, None) for k in keys)
+
+    def write_batch(self, ops: Iterable[Tuple[int, Optional[bytes]]]) -> None:
+        """Batched puts + deletes (value=None), the vectorized ingest lane.
+
+        Bit-for-bit equivalent to the scalar write loop — same WAL bytes,
+        same sequence numbers, same memtable state, and same flush
+        boundaries, hence identical IOStats — but the work is amortized:
+        each chunk appends one vectorized WAL batch record, bulk-inserts
+        into the memtable, and checks the flush trigger once.  Chunks are
+        sized so no *intermediate* insert could have filled the memtable
+        (entry sizes only shrink when an overwrite refunds bytes, so the
+        running upper bound is safe); a chunk degenerates to one entry only
+        when that single entry might fill it — exactly where the scalar
+        loop would flush.  With ``wal_fsync_every_write`` the batch fsyncs
+        once per chunk (group commit) instead of once per record; that is
+        the only accounting difference from the scalar loop.
+        """
+        pairs = list(ops)
+        n = len(pairs)
+        if n == 0:
+            return
+        keys_l, vals_l = zip(*pairs)
+        keys_l = list(map(int, keys_l))
+        # one pass of column prep for the whole batch; chunks take views
+        keys_arr = np.fromiter(keys_l, np.uint64, n)
+        vlens = np.fromiter(
+            (len(v) if v is not None else 0 for v in vals_l), np.int64, n)
+        ops_arr = np.fromiter((v is None for v in vals_l), np.uint8, n)
+        kb = self.memtable.key_bytes
+        cum = np.cumsum(vlens + kb)
+        i = 0
+        while i < n:
+            room = self.memtable.capacity_bytes - self.memtable.size_bytes
+            base = int(cum[i - 1]) if i else 0
+            # first index whose running total reaches the bound — O(log n)
+            # on the uncut cumsum, no per-chunk array copy
+            j = max(i + 1,
+                    int(np.searchsorted(cum, base + room, side="left")))
+            chunk_vals = vals_l[i:j]
+            first_seq = self._seq + 1
+            self._seq += j - i
+            self.wal.append_batch_cols(
+                chunk_vals, keys_arr[i:j], ops_arr[i:j], vlens[i:j],
+                first_seq, self.stats)
+            if self.config.wal_fsync_every_write:
+                self.wal.fsync(self.stats)
+            self.memtable.put_batch(keys_l[i:j], chunk_vals, first_seq,
+                                    added=int(cum[j - 1] - base))
+            if self.memtable.is_full():
+                self.flush()
+            i = j
+
     def flush(self):
         """Freeze the memtable into an L0 run (no merge — §3.2 L0 tiering)."""
         if len(self.memtable) == 0:
@@ -119,7 +193,8 @@ class LSMStore:
             self.stats.write_stalls += 1
             self._compact_until_quiet()
         self.wal.fsync(self.stats)
-        run = self.memtable.to_run(self._bits_for_level(0), self.stats)
+        run = self.memtable.to_run(self._bits_for_level(0), self.stats,
+                                   hash_fn=self._bloom_hash_fn())
         self.memtable.clear()
         self.wal.truncate()
         if len(run):
@@ -149,7 +224,11 @@ class LSMStore:
         deepest = self._deepest_nonempty()
         drop_tombs = task.include_dst and task.dst_level >= deepest
         merged = merge_runs(srcs + dsts, self._bits_for_level(task.dst_level),
-                            self.stats, drop_tombstones=drop_tombs)
+                            self.stats, drop_tombstones=drop_tombs,
+                            block_size=self.config.block_size,
+                            key_bytes=self.config.key_bytes,
+                            pair_merge=self._pair_merge_fn(),
+                            bloom_hash=self._bloom_hash_fn())
         self._levels[task.src_level] = []
         if task.include_dst:
             self._levels[task.dst_level] = [merged] if len(merged) else []
@@ -244,6 +323,43 @@ class LSMStore:
             except Exception:       # jax/pallas unavailable: stay on numpy
                 self._pallas_probe_fn = None
         return self._pallas_probe_fn
+
+    def _bloom_hash_fn(self):
+        """Resolve the Pallas filter-*build* hash route (numpy fallback).
+
+        Shares the ``use_pallas_bloom`` toggle with the probe route: when
+        on, flush and compaction rebuild output filters from one device-side
+        hash pass (``kernels.ops.bloom_build_hashes``) that is bit-identical
+        to the numpy family, so either backend may probe the result.
+        """
+        if not self.config.use_pallas_bloom:
+            return None
+        if self._pallas_hash_fn is _UNSET:
+            try:
+                from repro.kernels.ops import bloom_build_hashes
+                self._pallas_hash_fn = bloom_build_hashes
+            except Exception:       # jax/pallas unavailable: stay on numpy
+                self._pallas_hash_fn = None
+        return self._pallas_hash_fn
+
+    def _pair_merge_fn(self):
+        """Resolve the Pallas merge-path compaction lane (numpy fallback).
+
+        When ``use_pallas_merge`` is on, every pairwise merge of the
+        compaction ladder routes through ``kernels.ops.merge_runs_tiled``
+        (merge-path partition + bitonic network; interpret mode on CPU, the
+        same BlockSpecs lower via Mosaic on TPU).  Differentially tested
+        bit-for-bit against the numpy ladder and ``merge_runs_scalar``.
+        """
+        if not self.config.use_pallas_merge:
+            return None
+        if self._pallas_merge_fn is _UNSET:
+            try:
+                from repro.kernels.ops import merge_runs_tiled
+                self._pallas_merge_fn = merge_runs_tiled
+            except Exception:       # jax/pallas unavailable: stay on numpy
+                self._pallas_merge_fn = None
+        return self._pallas_merge_fn
 
     def multi_get(self, keys: Sequence[int],
                   snapshot: Optional[Version] = None) -> List[Optional[bytes]]:
@@ -499,29 +615,53 @@ class LSMStore:
     def total_entries(self) -> int:
         return sum(len(r) for lvl in self._levels for r in lvl) + len(self.memtable)
 
+    def _live_profile(self) -> Tuple[int, int]:
+        """(live entry count, live logical bytes) of the newest versions.
+
+        One vectorized pass: concatenate every source's keys newest-first
+        (memtable, then runs in read order), stable-argsort, and keep the
+        first occurrence of each key — the newest version, since stable
+        sorting preserves concatenation order within equal keys.  Replaces
+        the per-run ``np.isin`` against an ever-growing seen-set (quadratic
+        in the number of runs x entries).
+        """
+        parts_k: List[np.ndarray] = []
+        parts_vl: List[np.ndarray] = []
+        mem = self.memtable._data
+        if mem:
+            parts_k.append(np.fromiter(mem.keys(), KEY_DTYPE, len(mem)))
+            parts_vl.append(np.fromiter(
+                (TOMBSTONE_LEN if v is None else len(v)
+                 for _, v in mem.values()), np.int64, len(mem)))
+        for run in self._runs_newest_first(self._levels):
+            if len(run):
+                parts_k.append(run.keys)
+                parts_vl.append(run.vlens.astype(np.int64))
+        if not parts_k:
+            return 0, 0
+        K = np.concatenate(parts_k)
+        VL = np.concatenate(parts_vl)
+        order = np.argsort(K, kind="stable")
+        Ks = K[order]
+        first = np.empty(Ks.size, dtype=bool)
+        first[0] = True
+        np.not_equal(Ks[1:], Ks[:-1], out=first[1:])
+        win_vl = VL[order[first]]
+        live = win_vl != TOMBSTONE_LEN
+        n_live = int(np.count_nonzero(live))
+        logical = int(np.sum(win_vl[live])) + n_live * self.config.key_bytes
+        return n_live, logical
+
     def total_live_entries(self) -> int:
         """Logical entry count (newest versions only, tombstones excluded)."""
-        seen: set = set()
-        live = 0
-        for k, (s, v) in self.memtable._data.items():
-            seen.add(k)
-            if v is not None:
-                live += 1
-        for run in self._runs_newest_first(self._levels):
-            mask = ~np.isin(run.keys, np.fromiter(seen, dtype=KEY_DTYPE, count=len(seen))) \
-                if seen else np.ones(len(run), bool)
-            newk = run.keys[mask]
-            live += int(np.count_nonzero(run.vlens[mask] != TOMBSTONE_LEN))
-            seen.update(int(x) for x in newk)
-        return live
+        return self._live_profile()[0]
 
     def space_amplification(self) -> float:
-        phys = sum(r.data_bytes for lvl in self._levels for r in lvl)
-        live = self.total_live_entries()
-        if live == 0:
+        """Physical bytes stored / logical bytes of the live newest versions
+        (RocksDB's definition; 1.0 when nothing is live)."""
+        phys = sum(r.data_bytes for lvl in self._levels for r in lvl) \
+            + self.memtable.size_bytes
+        logical = self._live_profile()[1]
+        if logical == 0:
             return 1.0
-        # logical bytes: approximate with average entry size of physical data
-        total = sum(len(r) for lvl in self._levels for r in lvl)
-        if total == 0:
-            return 1.0
-        return phys / (phys * live / total)
+        return phys / logical

@@ -91,10 +91,9 @@ class _RunCursor:
         if self.cache is None:
             self.stats.blocks_read += b1 - first_new + 1
         else:
-            run = self.run
-            for bid in range(first_new, b1 + 1):
-                self.cache.read_block(run.run_id, bid, run.block_bytes(bid),
-                                      self.stats)
+            # span-charge the newly consumed blocks in one cache call
+            self.cache.read_block_span(self.run.run_id, first_new, b1,
+                                       self.run.block_bytes, self.stats)
         self._charged = b1
         self.pos = i + cnt
 

@@ -9,15 +9,20 @@ durability/recovery logic is real and testable without a filesystem
 from __future__ import annotations
 
 import struct
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .run import SortedRun, build_run
-from .types import KEY_BYTES, KEY_DTYPE, SEQ_DTYPE, TOMBSTONE_LEN, IOStats
+from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
+                    TOMBSTONE_LEN, IOStats)
 
 _PUT, _DEL = 0, 1
 _HDR = struct.Struct("<BQQI")  # op, key, seq, vlen
+# numpy twin of _HDR for vectorized batch appends (packed little-endian)
+_HDR_DTYPE = np.dtype([("op", "u1"), ("key", "<u8"),
+                       ("seq", "<u8"), ("vlen", "<u4")])
+assert _HDR_DTYPE.itemsize == _HDR.size
 
 
 class WriteAheadLog:
@@ -31,6 +36,72 @@ class WriteAheadLog:
         self._buf += _HDR.pack(op, key, seq, len(value))
         self._buf += value
         stats.wal_appends += 1
+
+    def append_batch(self, items: Sequence[Tuple[int, Optional[bytes]]],
+                     first_seq: int, stats: IOStats) -> None:
+        """Append one batch of records in a single vectorized pass.
+
+        ``items`` are (key, value-or-None-for-delete) pairs; record ``i``
+        gets sequence ``first_seq + i``.  The byte layout is identical to
+        ``len(items)`` scalar :meth:`append` calls (one header + payload per
+        record), so :meth:`records` replays a batch — including a torn tail,
+        where the fsync watermark cuts mid-record — exactly as it replays
+        scalar appends.
+        """
+        n = len(items)
+        if n == 0:
+            return
+        values = [v for _, v in items]
+        self.append_batch_cols(
+            values,
+            np.fromiter((k for k, _ in items), np.uint64, n),
+            np.fromiter((_DEL if v is None else _PUT for v in values),
+                        np.uint8, n),
+            np.fromiter((len(v) if v is not None else 0 for v in values),
+                        np.int64, n),
+            first_seq, stats)
+
+    def append_batch_cols(self, values: Sequence[Optional[bytes]],
+                          keys_arr: np.ndarray, ops_arr: np.ndarray,
+                          vlens_arr: np.ndarray, first_seq: int,
+                          stats: IOStats) -> None:
+        """Column-form :meth:`append_batch` (the engine's fast path, which
+        precomputes the header columns once per batch and passes per-chunk
+        views).  Headers are packed with one structured-dtype write;
+        uniform-length batches interleave header and payload with a single
+        2-D column copy, ragged ones with two index scatters — never a
+        per-record ``struct.pack``.
+        """
+        n = len(values)
+        if n == 0:
+            return
+        hdr = np.empty(n, dtype=_HDR_DTYPE)
+        hdr["op"] = ops_arr
+        hdr["key"] = keys_arr
+        hdr["seq"] = np.arange(first_seq, first_seq + n, dtype=np.uint64)
+        hdr["vlen"] = vlens_arr
+        hsz = _HDR.size
+        hview = hdr.view(np.uint8).reshape(n, hsz)
+        payload = b"".join(v for v in values if v is not None)
+        v0 = int(vlens_arr[0])
+        if int(vlens_arr.min()) == v0 == int(vlens_arr.max()):
+            # uniform record size: interleave with one 2-D column copy
+            out = np.empty((n, hsz + v0), dtype=np.uint8)
+            out[:, :hsz] = hview
+            if v0:
+                out[:, hsz:] = np.frombuffer(payload, np.uint8).reshape(n, v0)
+        else:
+            cum = np.cumsum(vlens_arr, dtype=np.int64)
+            starts = np.arange(n, dtype=np.int64) * hsz + (cum - vlens_arr)
+            out = np.empty(n * hsz + int(cum[-1]), dtype=np.uint8)
+            out[(starts[:, None] + np.arange(hsz)).ravel()] = hview.ravel()
+            if payload:
+                flat = np.frombuffer(payload, dtype=np.uint8)
+                intra = np.arange(flat.size, dtype=np.int64) \
+                    - np.repeat(cum - vlens_arr, vlens_arr)
+                out[np.repeat(starts + hsz, vlens_arr) + intra] = flat
+        self._buf += out.tobytes()
+        stats.wal_appends += n
 
     def fsync(self, stats: IOStats):
         self._synced_upto = len(self._buf)
@@ -62,9 +133,11 @@ class WriteAheadLog:
 class Memtable:
     """Insertion buffer. Size accounting matches the run entry-size model."""
 
-    def __init__(self, capacity_bytes: int, key_bytes: int = KEY_BYTES):
+    def __init__(self, capacity_bytes: int, key_bytes: int = KEY_BYTES,
+                 block_size: int = BLOCK_SIZE):
         self.capacity_bytes = capacity_bytes
         self.key_bytes = key_bytes
+        self.block_size = block_size
         self._data: Dict[int, Tuple[int, Optional[bytes]]] = {}
         self._bytes = 0
 
@@ -75,6 +148,37 @@ class Memtable:
             self._bytes -= self.key_bytes + (len(prev[1]) if prev[1] is not None else 0)
         self._data[key] = (seq, value)
         self._bytes += self.key_bytes + (len(value) if value is not None else 0)
+
+    def put_batch(self, keys: Sequence[int],
+                  values: Sequence[Optional[bytes]], first_seq: int,
+                  added: Optional[int] = None) -> None:
+        """Bulk insert: ``keys[i]`` gets sequence ``first_seq + i``.
+
+        The last occurrence of a duplicate key wins with its own sequence
+        number, exactly as a scalar put loop would leave it.  The dict is
+        built and merged with C-level ``zip``/``update``; byte accounting
+        refunds overwritten entries from one ``map(get)`` pass instead of a
+        per-entry probe.  ``added`` optionally supplies the precomputed byte
+        total of the batch (valid only without in-batch duplicates — the
+        engine passes its chunk-sizing cumsum; ignored when duplicates
+        collapse entries).
+        """
+        data = self._data
+        kb = self.key_bytes
+        n = len(keys)
+        incoming = dict(zip(keys, zip(range(first_seq, first_seq + n),
+                                      values)))
+        if added is None or len(incoming) != n:
+            added = sum(kb + len(v) if v is not None else kb
+                        for _, v in incoming.values())
+        if data:
+            removed = sum(
+                kb + len(pv[1]) if pv[1] is not None else kb
+                for pv in map(data.get, incoming) if pv is not None)
+        else:
+            removed = 0
+        data.update(incoming)
+        self._bytes += added - removed
 
     def get(self, key: int) -> Optional[Tuple[int, Optional[bytes]]]:
         return self._data.get(key)
@@ -94,24 +198,48 @@ class Memtable:
     def is_full(self) -> bool:
         return self._bytes >= self.capacity_bytes
 
-    def to_run(self, bits_per_key: float, stats: IOStats) -> SortedRun:
+    def to_run(self, bits_per_key: float, stats: IOStats,
+               hash_fn=None) -> SortedRun:
+        """Freeze into a sorted run (one python pass + vectorized packing).
+
+        Values are joined into one flat byte buffer and scattered into the
+        padded value matrix with a single fancy-index write; the run
+        inherits this memtable's ``block_size``/``key_bytes``.  ``hash_fn``
+        reroutes the bloom build's hash pass (engine's Pallas route).
+        """
         n = len(self._data)
         keys = np.fromiter(self._data.keys(), dtype=KEY_DTYPE, count=n)
-        seqs = np.empty(n, dtype=SEQ_DTYPE)
-        vmax = 0
-        for i, (s, v) in enumerate(self._data.values()):
-            seqs[i] = s
-            if v is not None and len(v) > vmax:
-                vmax = len(v)
-        vlens = np.empty(n, dtype=np.int32)
-        vals = np.zeros((n, vmax), dtype=np.uint8)
-        for i, (s, v) in enumerate(self._data.values()):
-            if v is None:
-                vlens[i] = TOMBSTONE_LEN
-            else:
-                vlens[i] = len(v)
-                vals[i, :len(v)] = np.frombuffer(v, dtype=np.uint8)
-        run = build_run(keys, seqs, vlens, vals, bits_per_key=bits_per_key)
+        if n:
+            seq_t, val_t = zip(*self._data.values())   # two C-level passes
+            seqs = np.fromiter(seq_t, dtype=SEQ_DTYPE, count=n)
+            vlens = np.fromiter(
+                (TOMBSTONE_LEN if v is None else len(v) for v in val_t),
+                dtype=np.int32, count=n)
+        else:
+            val_t = ()
+            seqs = np.empty(0, dtype=SEQ_DTYPE)
+            vlens = np.empty(0, dtype=np.int32)
+        lens = np.maximum(vlens, 0).astype(np.int64)
+        vmax = int(lens.max()) if n else 0
+        if vmax and int(vlens.min()) == vmax:
+            # uniform value size, no tombstones: the joined payload IS the
+            # row-major matrix
+            flat = np.frombuffer(b"".join(val_t), dtype=np.uint8)
+            vals = flat.reshape(n, vmax).copy()
+        elif vmax:
+            vals = np.zeros((n, vmax), dtype=np.uint8)
+            flat = np.frombuffer(
+                b"".join(v for v in val_t if v is not None), dtype=np.uint8)
+            if flat.size:
+                # row-major boolean scatter: C-order assignment walks rows
+                # left-to-right, exactly the joined payload's layout
+                mask = np.arange(vmax)[None, :] < lens[:, None]
+                vals[mask] = flat
+        else:
+            vals = np.zeros((n, 0), dtype=np.uint8)
+        run = build_run(keys, seqs, vlens, vals, bits_per_key=bits_per_key,
+                        block_size=self.block_size, key_bytes=self.key_bytes,
+                        hash_fn=hash_fn)
         stats.entries_flushed += len(run)
         stats.bytes_flushed += run.data_bytes
         stats.blocks_written += run.n_blocks

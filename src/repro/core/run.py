@@ -14,6 +14,7 @@ any key with zero block touches, exactly the paper's fence-pointer model.
 """
 from __future__ import annotations
 
+import heapq
 import itertools
 from typing import Iterable, List, Optional, Sequence, Tuple
 
@@ -33,7 +34,8 @@ class SortedRun:
 
     def __init__(self, keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
                  vals: np.ndarray, bits_per_key: float = 0.0,
-                 block_size: int = BLOCK_SIZE, key_bytes: int = KEY_BYTES):
+                 block_size: int = BLOCK_SIZE, key_bytes: int = KEY_BYTES,
+                 hash_fn=None):
         assert keys.ndim == 1
         self.block_size = block_size
         self.run_id = next(_run_ids)
@@ -56,7 +58,7 @@ class SortedRun:
             self.fence_keys = self.keys[first_idx]
         else:
             self.fence_keys = np.zeros(0, dtype=KEY_DTYPE)
-        self.bloom = BloomFilter(self.keys, bits_per_key)
+        self.bloom = BloomFilter(self.keys, bits_per_key, hash_fn=hash_fn)
         self.level_hint = -1  # set by the manifest; informational
 
     # ------------------------------------------------------------------ size
@@ -153,8 +155,9 @@ class SortedRun:
         if cache is None:
             stats.blocks_read += int(cand.size)
         else:
-            for bid in self.block_of[np.minimum(idx, len(self) - 1)]:
-                self._charge_block(bid, stats, cache)
+            cache.read_blocks(self.run_id,
+                              self.block_of[np.minimum(idx, len(self) - 1)]
+                              .tolist(), self.block_bytes, stats)
         inb = idx < len(self)
         hit = np.zeros(cand.size, dtype=bool)
         hit[inb] = self.keys[idx[inb]] == keys[cand][inb]
@@ -189,8 +192,16 @@ class SortedRun:
 def build_run(keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
               vals: np.ndarray, bits_per_key: float = 0.0,
               assume_unique_sorted: bool = False,
-              drop_tombstones: bool = False) -> SortedRun:
-    """Sort by key, deduplicate keeping the newest seq, optionally GC deletes."""
+              drop_tombstones: bool = False,
+              block_size: int = BLOCK_SIZE, key_bytes: int = KEY_BYTES,
+              hash_fn=None) -> SortedRun:
+    """Sort by key, deduplicate keeping the newest seq, optionally GC deletes.
+
+    ``block_size``/``key_bytes`` shape the constructed run's block layout
+    (threaded from ``LSMConfig`` by the engine); ``hash_fn`` optionally
+    reroutes the bloom build's hash pass (e.g. through the Pallas kernel
+    family — see ``core.bloom.BloomFilter``).
+    """
     keys = np.asarray(keys, dtype=KEY_DTYPE)
     seqs = np.asarray(seqs, dtype=SEQ_DTYPE)
     vlens = np.asarray(vlens, dtype=np.int32)
@@ -207,12 +218,118 @@ def build_run(keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
     if drop_tombstones and len(keys):
         live = vlens != TOMBSTONE_LEN
         keys, seqs, vlens, vals = keys[live], seqs[live], vlens[live], vals[live]
-    return SortedRun(keys, seqs, vlens, vals, bits_per_key=bits_per_key)
+    return SortedRun(keys, seqs, vlens, vals, bits_per_key=bits_per_key,
+                     block_size=block_size, key_bytes=key_bytes,
+                     hash_fn=hash_fn)
+
+
+def _account_merge_output(out: SortedRun, stats: IOStats) -> SortedRun:
+    """Write-side cost model, shared by every merge path (paper §2.2)."""
+    stats.blocks_written += out.n_blocks
+    stats.entries_compacted += len(out)
+    stats.bytes_compacted += out.data_bytes
+    stats.compactions += 1
+    return out
+
+
+# A pair merge gallops (searchsorted) only when one side is much smaller;
+# balanced pairs fall back to one stable (radix) argsort over the concat,
+# which is faster than per-element binary search on balanced inputs.
+_GALLOP_RATIO = 8
+# Below this many total input entries the fully vectorized path's fixed
+# numpy-call overhead exceeds its per-entry win over concat+lexsort.
+_VECTOR_MIN_ENTRIES = 8192
+
+
+def _merge_pair(a, b, seqs_cat: np.ndarray, pair_merge=None):
+    """Merge two (keys, gid) nodes of the ladder into one.
+
+    Inputs have strictly increasing keys; the output does too (the newer
+    sequence number wins each duplicate).  Nodes carry only the key column
+    and a *global index* into the concatenated inputs — sequence numbers are
+    gathered from ``seqs_cat`` only at the (few) duplicate positions, so
+    each ladder round moves two columns instead of four.
+
+    Backend selection (all three produce identical output):
+      * skewed pair — gallop: one ``np.searchsorted`` of the smaller side
+        into the larger (each element's output slot is its own index plus
+        its rank in the other run), then two scatters; O(small·log(large))
+        lookups instead of sorting ``large`` again;
+      * balanced pair — one stable argsort of the concatenated keys
+        (radix for integer keys, so no comparison sort either);
+      * ``pair_merge(keys_a, keys_b) -> (merged_keys, src_idx)`` reroutes
+        the interleave through an accelerator
+        (``kernels.ops.merge_runs_tiled``: merge-path partition + bitonic
+        network), ``src_idx`` uint32 with bit 31 flagging ``b`` entries.
+
+    Entries with equal key AND equal seq resolve arbitrarily between the
+    backends (the engine's sequence numbers are unique).
+    """
+    ka, ga = a
+    kb, gb = b
+    na, nb = ka.size, kb.size
+    if na == 0:
+        return b
+    if nb == 0:
+        return a
+    n = na + nb
+    if pair_merge is not None:
+        keys, sidx = pair_merge(ka, kb)
+        keys = np.asarray(keys)
+        sidx = np.asarray(sidx)
+        from_b = (sidx & np.uint32(1 << 31)) != 0
+        r = (sidx & np.uint32(0x7FFFFFFF)).astype(np.int64)
+        gid = np.empty(n, dtype=np.int64)
+        in_a = ~from_b
+        gid[in_a] = ga[r[in_a]]
+        gid[from_b] = gb[r[from_b]]
+    elif min(na, nb) * _GALLOP_RATIO <= n:
+        if na <= nb:
+            small_k, small_g, big_k, big_g, side = ka, ga, kb, gb, "left"
+        else:
+            small_k, small_g, big_k, big_g, side = kb, gb, ka, ga, "right"
+        # 'left'/'right' keep equal keys a-first, matching the argsort path
+        pos = np.arange(small_k.size, dtype=np.int64) \
+            + np.searchsorted(big_k, small_k, side)
+        in_big = np.ones(n, dtype=bool)
+        in_big[pos] = False
+        keys = np.empty(n, dtype=ka.dtype)
+        keys[pos] = small_k
+        keys[in_big] = big_k     # boolean fill preserves sorted order
+        gid = np.empty(n, dtype=np.int64)
+        gid[pos] = small_g
+        gid[in_big] = big_g
+    else:
+        keys = np.concatenate([ka, kb])
+        order = np.argsort(keys, kind="stable")  # radix; a-first on ties
+        keys = keys[order]
+        gid = np.concatenate([ga, gb])[order]
+    # Dedup: a key occurs at most twice and duplicates are adjacent; the
+    # newer seq wins (equal-seq ties keep the first occurrence, matching
+    # the scalar path's stable lexsort).
+    dup = np.nonzero(keys[1:] == keys[:-1])[0]
+    if dup.size == 0:
+        return keys, gid
+    keep = np.ones(n, dtype=bool)
+    second_newer = seqs_cat[gid[dup + 1]] > seqs_cat[gid[dup]]
+    keep[np.where(second_newer, dup, dup + 1)] = False
+    return keys[keep], gid[keep]
 
 
 def merge_runs(runs: Sequence[SortedRun], bits_per_key: float,
-               stats: IOStats, drop_tombstones: bool = False) -> SortedRun:
-    """K-way sort-merge (compaction). Newest seq wins on duplicate keys.
+               stats: IOStats, drop_tombstones: bool = False,
+               block_size: int = BLOCK_SIZE, key_bytes: int = KEY_BYTES,
+               pair_merge=None, bloom_hash=None) -> SortedRun:
+    """K-way compaction merge exploiting input sortedness (DESIGN.md §10).
+
+    A balanced tournament of pairwise merges over (key, global-index)
+    columns: each round interleaves sorted pairs with ``np.searchsorted``
+    (or the Pallas merge-path lane via ``pair_merge``) and drops shadowed
+    duplicates immediately, so seqs/vlens/values are each moved exactly once
+    — one gather per column at the end, against the scalar oracle's
+    pad + concat + full lexsort + permute + mask of every column.
+    Bit-for-bit identical output and IOStats to the retained
+    ``merge_runs_scalar`` oracle (differentially tested).
 
     Cost model: every input block is read, every output block written; the
     entry/byte counters feed write-amplification (paper §2.2).
@@ -220,7 +337,84 @@ def merge_runs(runs: Sequence[SortedRun], bits_per_key: float,
     if not runs:
         return build_run(np.zeros(0, KEY_DTYPE), np.zeros(0, SEQ_DTYPE),
                          np.zeros(0, np.int32), np.zeros((0, 0), np.uint8),
-                         bits_per_key)
+                         bits_per_key, block_size=block_size,
+                         key_bytes=key_bytes, hash_fn=bloom_hash)
+    if pair_merge is None and sum(len(r) for r in runs) < _VECTOR_MIN_ENTRIES:
+        # tiny merges: the concat+lexsort core has the smaller constant
+        # factor (identical output either way); the Pallas lane is never
+        # shortcut so the kernel route stays exercised end to end
+        return merge_runs_scalar(runs, bits_per_key, stats,
+                                 drop_tombstones=drop_tombstones,
+                                 block_size=block_size, key_bytes=key_bytes,
+                                 bloom_hash=bloom_hash)
+    for r in runs:
+        stats.blocks_read += r.n_blocks
+    lens = [len(r) for r in runs]
+    offs = np.zeros(len(runs) + 1, dtype=np.int64)
+    np.cumsum(lens, out=offs[1:])
+    seqs_cat = runs[0].seqs if len(runs) == 1 else \
+        np.concatenate([r.seqs for r in runs])
+    # Huffman-ordered tournament: always merge the two smallest nodes, so a
+    # dominant run (the usual dst level) joins only the final merges and
+    # total element moves stay near the entropy bound.
+    heap = [(len(r), i, (r.keys, np.arange(offs[i], offs[i + 1],
+                                           dtype=np.int64)))
+            for i, r in enumerate(runs)]
+    heapq.heapify(heap)
+    tick = len(runs)
+    while len(heap) > 1:
+        _, ia, a = heapq.heappop(heap)
+        _, ib, b = heapq.heappop(heap)
+        if ib < ia:          # keep earlier-run-first orientation for ties
+            a, b = b, a
+        merged = _merge_pair(a, b, seqs_cat, pair_merge)
+        heapq.heappush(heap, (merged[0].size, tick, merged))
+        tick += 1
+    keys, gid = heap[0][2]
+    vlens_cat = runs[0].vlens if len(runs) == 1 else \
+        np.concatenate([r.vlens for r in runs])
+    vlens = vlens_cat[gid]
+    if drop_tombstones and keys.size:
+        live = vlens != TOMBSTONE_LEN
+        keys, vlens, gid = keys[live], vlens[live], gid[live]
+    seqs = seqs_cat[gid]
+    # Winner values move in two bulk passes (concat + one row gather),
+    # against the scalar oracle's concat + full permute + keep-mask three;
+    # only sources narrower than vmax need padding first.
+    vmax = max((r.vals.shape[1] if r.vals.ndim == 2 else 0) for r in runs)
+    if vmax == 0:
+        vals = np.zeros((keys.size, 0), dtype=np.uint8)
+    else:
+        mats = []
+        for r in runs:
+            v = r.vals if r.vals.ndim == 2 else r.vals.reshape(len(r), 0)
+            if v.shape[1] < vmax:
+                v = np.pad(v, ((0, 0), (0, vmax - v.shape[1])))
+            mats.append(v)
+        vals_cat = mats[0] if len(mats) == 1 else np.concatenate(mats)
+        vals = vals_cat[gid]
+    out = SortedRun(keys, seqs, vlens, vals, bits_per_key=bits_per_key,
+                    block_size=block_size, key_bytes=key_bytes,
+                    hash_fn=bloom_hash)
+    return _account_merge_output(out, stats)
+
+
+def merge_runs_scalar(runs: Sequence[SortedRun], bits_per_key: float,
+                      stats: IOStats, drop_tombstones: bool = False,
+                      block_size: int = BLOCK_SIZE,
+                      key_bytes: int = KEY_BYTES,
+                      bloom_hash=None) -> SortedRun:
+    """Reference compaction merge (concat + re-lexsort from scratch).
+
+    The pre-vectorization implementation, kept as the differential-test
+    oracle and the benchmarks' scalar baseline: it ignores that its inputs
+    are already sorted.  Identical output and IOStats to ``merge_runs``.
+    """
+    if not runs:
+        return build_run(np.zeros(0, KEY_DTYPE), np.zeros(0, SEQ_DTYPE),
+                         np.zeros(0, np.int32), np.zeros((0, 0), np.uint8),
+                         bits_per_key, block_size=block_size,
+                         key_bytes=key_bytes, hash_fn=bloom_hash)
     vmax = max((r.vals.shape[1] if r.vals.ndim == 2 else 0) for r in runs)
     ks, ss, ls, vs = [], [], [], []
     for r in runs:
@@ -235,9 +429,7 @@ def merge_runs(runs: Sequence[SortedRun], bits_per_key: float,
     out = build_run(np.concatenate(ks), np.concatenate(ss),
                     np.concatenate(ls),
                     np.concatenate(vs) if vmax else np.zeros((sum(map(len, runs)), 0), np.uint8),
-                    bits_per_key=bits_per_key, drop_tombstones=drop_tombstones)
-    stats.blocks_written += out.n_blocks
-    stats.entries_compacted += len(out)
-    stats.bytes_compacted += out.data_bytes
-    stats.compactions += 1
-    return out
+                    bits_per_key=bits_per_key, drop_tombstones=drop_tombstones,
+                    block_size=block_size, key_bytes=key_bytes,
+                    hash_fn=bloom_hash)
+    return _account_merge_output(out, stats)

@@ -9,9 +9,15 @@ VMEM tiles with *static* strides — sort it.  Payloads (value indices) ride
 along through the same selects, so the engine can permute value rows after
 the kernel returns.
 
-ops.py composes multi-tile runs: tile boundaries are partitioned with
-jnp.searchsorted (host-side merge path), each pair of partitions is merged
-by one grid cell.
+Keys are carried as *two u32 lanes* (hi, lo) compared lexicographically —
+the VPU has no u64 lanes, exactly the split the bloom-probe kernel makes —
+so the engine's uint64 user keys merge exactly (u32 callers pass hi = 0).
+
+ops.py composes multi-tile runs: tile boundaries are partitioned with the
+host-side :func:`merge_path_partition` (one vectorized ``np.searchsorted``
+pass instead of a per-diagonal binary-search loop), and each pair of
+partitions is merged by one grid cell.  The same BlockSpecs drive interpret
+mode on CPU and Mosaic lowering on TPU.
 """
 from __future__ import annotations
 
@@ -19,51 +25,91 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 
 
-def _compare_exchange(keys: jnp.ndarray, payload: jnp.ndarray, stride: int):
-    """One bitonic stage over a (2T,) tile: static-stride compare-exchange."""
-    n = keys.shape[0]
-    k2 = keys.reshape(n // (2 * stride), 2, stride)
-    p2 = payload.reshape(n // (2 * stride), 2, stride)
-    lo_k, hi_k = k2[:, 0], k2[:, 1]
-    lo_p, hi_p = p2[:, 0], p2[:, 1]
-    swap = lo_k > hi_k
-    new_lo_k = jnp.where(swap, hi_k, lo_k)
-    new_hi_k = jnp.where(swap, lo_k, hi_k)
-    new_lo_p = jnp.where(swap, hi_p, lo_p)
-    new_hi_p = jnp.where(swap, lo_p, hi_p)
-    keys = jnp.stack([new_lo_k, new_hi_k], axis=1).reshape(n)
-    payload = jnp.stack([new_lo_p, new_hi_p], axis=1).reshape(n)
-    return keys, payload
+def _compare_exchange(hi: jnp.ndarray, lo: jnp.ndarray, payload: jnp.ndarray,
+                      stride: int):
+    """One bitonic stage over (2T,) tiles: static-stride compare-exchange of
+    lexicographic (hi, lo, payload) triples.  The payload tie-break makes
+    the network deterministic AND orders tile pads (payload 0xFFFFFFFF,
+    larger than any real source index) strictly after real entries sharing
+    their key — so even a real key equal to the dtype maximum cannot be
+    displaced by padding."""
+    n = hi.shape[0]
+
+    def split(x):
+        x2 = x.reshape(n // (2 * stride), 2, stride)
+        return x2[:, 0], x2[:, 1]
+
+    hi_l, hi_r = split(hi)
+    lo_l, lo_r = split(lo)
+    p_l, p_r = split(payload)
+    keys_eq = (hi_l == hi_r) & (lo_l == lo_r)
+    swap = (hi_l > hi_r) | ((hi_l == hi_r) & (lo_l > lo_r)) \
+        | (keys_eq & (p_l > p_r))
+
+    def merge(l, r):
+        new_l = jnp.where(swap, r, l)
+        new_r = jnp.where(swap, l, r)
+        return jnp.stack([new_l, new_r], axis=1).reshape(n)
+
+    return merge(hi_l, hi_r), merge(lo_l, lo_r), merge(p_l, p_r)
 
 
-def bitonic_merge_kernel(a_ref, b_ref, pa_ref, pb_ref, ok_ref, op_ref,
+def bitonic_merge_kernel(a_hi_ref, a_lo_ref, b_hi_ref, b_lo_ref,
+                         pa_ref, pb_ref, ohi_ref, olo_ref, op_ref,
                          *, tile: int):
-    """Merge two sorted (T,) tiles (keys + payloads) into sorted (2T,)."""
-    keys = jnp.concatenate([a_ref[...], b_ref[...][::-1]])
+    """Merge two sorted (T,) tiles (split-u64 keys + payloads) into (2T,)."""
+    hi = jnp.concatenate([a_hi_ref[...], b_hi_ref[...][::-1]])
+    lo = jnp.concatenate([a_lo_ref[...], b_lo_ref[...][::-1]])
     payload = jnp.concatenate([pa_ref[...], pb_ref[...][::-1]])
     stride = tile
     while stride >= 1:
-        keys, payload = _compare_exchange(keys, payload, stride)
+        hi, lo, payload = _compare_exchange(hi, lo, payload, stride)
         stride //= 2
-    ok_ref[...] = keys
+    ohi_ref[...] = hi
+    olo_ref[...] = lo
     op_ref[...] = payload
 
 
-def bitonic_merge_pallas(a: jax.Array, b: jax.Array, pa: jax.Array,
-                         pb: jax.Array, interpret: bool = True):
-    """a, b: sorted (n, T) tile batches; pa, pb: payloads. Returns merged
-    (n, 2T) keys + payloads — one grid cell per tile pair."""
-    n, tile = a.shape
+def bitonic_merge_pallas(a_hi: jax.Array, a_lo: jax.Array, b_hi: jax.Array,
+                         b_lo: jax.Array, pa: jax.Array, pb: jax.Array,
+                         interpret: bool = True):
+    """a/b: sorted (n, T) tile batches as (hi, lo) u32 lanes; pa, pb: u32
+    payloads.  Returns merged (n, 2T) key lanes + payloads — one grid cell
+    per tile pair."""
+    n, tile = a_lo.shape
     kern = functools.partial(bitonic_merge_kernel, tile=tile)
     return pl.pallas_call(
         kern,
         grid=(n,),
-        in_specs=[pl.BlockSpec((None, tile), lambda i: (i, 0))] * 4,
-        out_specs=[pl.BlockSpec((None, 2 * tile), lambda i: (i, 0))] * 2,
-        out_shape=[jax.ShapeDtypeStruct((n, 2 * tile), a.dtype),
+        in_specs=[pl.BlockSpec((None, tile), lambda i: (i, 0))] * 6,
+        out_specs=[pl.BlockSpec((None, 2 * tile), lambda i: (i, 0))] * 3,
+        out_shape=[jax.ShapeDtypeStruct((n, 2 * tile), a_hi.dtype),
+                   jax.ShapeDtypeStruct((n, 2 * tile), a_lo.dtype),
                    jax.ShapeDtypeStruct((n, 2 * tile), pa.dtype)],
         interpret=interpret,
-    )(a, b, pa, pb)
+    )(a_hi, a_lo, b_hi, b_lo, pa, pb)
+
+
+def merge_path_partition(keys_a: np.ndarray, keys_b: np.ndarray, tile: int):
+    """Host-side merge-path split at every ``tile``-th output diagonal.
+
+    One vectorized pass: each element's final slot in the merged output is
+    its own index plus its rank in the other input (ties break a-first), so
+    the count of A-elements before diagonal ``d`` is one ``searchsorted``
+    into those slots.  Replaces the per-diagonal binary-search loop; each
+    cell consumes at most ``tile`` from either input by construction.
+
+    Returns ``(bounds_a, bounds_b)``, int64 arrays of length n_tiles + 1.
+    """
+    na, nb = len(keys_a), len(keys_b)
+    n_out = na + nb
+    n_tiles = max(1, -(-n_out // tile))
+    pos_a = np.arange(na, dtype=np.int64) + np.searchsorted(keys_b, keys_a,
+                                                            side="left")
+    diag = np.minimum(np.arange(n_tiles + 1, dtype=np.int64) * tile, n_out)
+    bounds_a = np.searchsorted(pos_a, diag, side="left")
+    return bounds_a, diag - bounds_a

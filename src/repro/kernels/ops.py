@@ -13,8 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bloom_probe import bloom_probe_pallas
+from .bloom_probe import hash_pair as _kernel_hash_pair
 from .flash_attention import flash_attention_pallas
-from .merge_path import bitonic_merge_pallas
+from .merge_path import bitonic_merge_pallas, merge_path_partition
 from .paged_attention import paged_attention_pallas
 
 
@@ -69,65 +70,136 @@ def bloom_probe_filter(bf, keys, interpret: bool = True) -> np.ndarray:
 
 
 @partial(jax.jit, static_argnames=("interpret",))
+def _merge_tiles_jit(a_hi, a_lo, b_hi, b_lo, pa, pb, interpret=True):
+    return bitonic_merge_pallas(a_hi, a_lo, b_hi, b_lo, pa, pb,
+                                interpret=interpret)
+
+
 def merge_sorted_tiles(a: jax.Array, b: jax.Array, pa: jax.Array,
                        pb: jax.Array, interpret: bool = True):
-    """Merge batches of sorted tiles: (n,T)+(n,T) -> (n,2T) sorted."""
-    return bitonic_merge_pallas(a, b, pa, pb, interpret=interpret)
+    """Merge batches of sorted u32 tiles: (n,T)+(n,T) -> (n,2T) sorted.
+
+    Thin single-lane wrapper over the lexicographic (hi, lo) kernel with
+    hi = 0; u64 callers go through :func:`merge_runs_tiled`, which splits
+    keys into both lanes.
+    """
+    zero = jnp.zeros_like(a)
+    _, lo, payload = _merge_tiles_jit(zero, a, jnp.zeros_like(b), b, pa, pb,
+                                      interpret=interpret)
+    return lo, payload
+
+
+def _to_u64_order(keys: np.ndarray) -> np.ndarray:
+    """Order-preserving map of any integer dtype onto uint64.
+
+    Unsigned dtypes widen directly; signed dtypes flip the sign bit after
+    widening to int64 (the classic radix trick), so lexicographic (hi, lo)
+    u32-lane comparison reproduces the native ordering exactly.  Float keys
+    are rejected — the two-lane kernel compares integer lanes only.
+    """
+    if keys.dtype == np.uint64:
+        return keys
+    if np.issubdtype(keys.dtype, np.unsignedinteger):
+        return keys.astype(np.uint64)
+    if np.issubdtype(keys.dtype, np.signedinteger):
+        return keys.astype(np.int64).view(np.uint64) ^ np.uint64(1 << 63)
+    raise TypeError(f"merge_runs_tiled requires integer keys, "
+                    f"got {keys.dtype}")
+
+
+def _from_u64_order(merged: np.ndarray, dtype: np.dtype) -> np.ndarray:
+    """Invert :func:`_to_u64_order` back to the caller's key dtype."""
+    if dtype == np.uint64:
+        return merged
+    if np.issubdtype(dtype, np.unsignedinteger):
+        return merged.astype(dtype)
+    return (merged ^ np.uint64(1 << 63)).view(np.int64).astype(dtype)
+
+
+def _split_key_lanes(keys: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """order-mapped u64 -> (hi32, lo32) kernel lanes."""
+    return ((keys >> np.uint64(32)).astype(np.uint32),
+            (keys & np.uint64(0xFFFFFFFF)).astype(np.uint32))
 
 
 def merge_runs_tiled(keys_a: np.ndarray, keys_b: np.ndarray,
                      tile: int = 256, interpret: bool = True
                      ) -> Tuple[np.ndarray, np.ndarray]:
-    """Full two-run merge: host-side merge-path partition (searchsorted on
-    the fence keys) + one bitonic kernel launch per tile pair.
+    """Full two-run merge: host-side merge-path partition + one bitonic
+    kernel launch per tile pair (the engine's ``use_pallas_merge`` lane).
 
-    Returns (merged_keys, source_index) where source_index encodes
-    (run_id << 32 | position) so the engine can permute value rows.
+    The partition and the tile packing are fully vectorized
+    (``merge_path_partition`` + two scatter passes — no per-tile Python
+    loop); keys are carried as (hi, lo) u32 lanes so uint64 engine keys
+    merge exactly.  Returns (merged_keys, source_index) where source_index
+    is uint32 with bit 31 flagging entries from ``keys_b`` and the low bits
+    giving the source row, so the engine can permute value rows.  Tile pads
+    carry the lane maxima plus payload 0xFFFFFFFF, which the kernel's
+    payload tie-break orders after any real entry — keys equal to the dtype
+    maximum therefore merge correctly (runs longer than 2^31 - 1 entries
+    would collide with the pad payload, far beyond this engine's scale).
     """
+    out_dtype = keys_a.dtype
+    keys_a = _to_u64_order(np.ascontiguousarray(keys_a))
+    keys_b = _to_u64_order(np.ascontiguousarray(keys_b))
     na, nb = len(keys_a), len(keys_b)
     n_out = na + nb
     # Diagonal spacing = tile: merge-path guarantees each cell consumes at
-    # most `tile` from either input; pads sort to the back (+inf), so each
-    # cell's first `consumed` outputs are exact.
-    n_tiles = max(1, -(-n_out // tile))
-    pad_val = np.iinfo(keys_a.dtype).max if \
-        np.issubdtype(keys_a.dtype, np.integer) else np.finfo(keys_a.dtype).max
-    at = np.full((n_tiles, tile), pad_val, dtype=keys_a.dtype)
-    bt = np.full((n_tiles, tile), pad_val, dtype=keys_b.dtype)
-    pa = np.zeros((n_tiles, tile), dtype=np.uint32)
-    pb = np.zeros((n_tiles, tile), dtype=np.uint32)
-    bounds_a = [0]
-    bounds_b = [0]
-    for t in range(1, n_tiles + 1):
-        d = min(t * tile, n_out)
-        lo, hi = max(0, d - nb), min(d, na)
-        while lo < hi:  # merge-path binary search on the diagonal
-            mid = (lo + hi) // 2
-            if keys_a[mid] < keys_b[d - mid - 1]:
-                lo = mid + 1
-            else:
-                hi = mid
-        bounds_a.append(lo)
-        bounds_b.append(d - lo)
-    for t in range(n_tiles):
-        ia, ja = bounds_a[t], bounds_a[t + 1]
-        ib, jb = bounds_b[t], bounds_b[t + 1]
-        at[t, :ja - ia] = keys_a[ia:ja]
-        pa[t, :ja - ia] = np.arange(ia, ja, dtype=np.uint32)
-        bt[t, :jb - ib] = keys_b[ib:jb]
-        pb[t, :jb - ib] = (np.arange(ib, jb, dtype=np.uint32) |
-                           np.uint32(1 << 31))
-    ok, op = merge_sorted_tiles(jnp.asarray(at), jnp.asarray(bt),
-                                jnp.asarray(pa), jnp.asarray(pb),
-                                interpret=interpret)
-    ok = np.asarray(ok).reshape(-1)
+    # most `tile` from either input; pads sort to the back (lane maxima), so
+    # each cell's first `consumed` outputs are exact.
+    bounds_a, bounds_b = merge_path_partition(keys_a, keys_b, tile)
+    n_tiles = len(bounds_a) - 1
+    lanes = []
+    for keys, bounds, flag in ((keys_a, bounds_a, 0),
+                               (keys_b, bounds_b, np.uint32(1 << 31))):
+        n = len(keys)
+        hi, lo = _split_key_lanes(keys)
+        t_hi = np.full((n_tiles, tile), 0xFFFFFFFF, dtype=np.uint32)
+        t_lo = np.full((n_tiles, tile), 0xFFFFFFFF, dtype=np.uint32)
+        # pad payload 0xFFFFFFFF: sorts after every real source index, so
+        # the kernel's payload tie-break keeps pads strictly behind real
+        # entries even when a real key equals the dtype maximum
+        t_p = np.full((n_tiles, tile), 0xFFFFFFFF, dtype=np.uint32)
+        if n:
+            idx = np.arange(n, dtype=np.int64)
+            t_of = np.searchsorted(bounds, idx, side="right") - 1
+            off = idx - bounds[t_of]
+            t_hi[t_of, off] = hi
+            t_lo[t_of, off] = lo
+            t_p[t_of, off] = idx.astype(np.uint32) | flag
+        lanes.extend((t_hi, t_lo, t_p))
+    a_hi, a_lo, pa, b_hi, b_lo, pb = lanes
+    ohi, olo, op = _merge_tiles_jit(
+        jnp.asarray(a_hi), jnp.asarray(a_lo), jnp.asarray(b_hi),
+        jnp.asarray(b_lo), jnp.asarray(pa), jnp.asarray(pb),
+        interpret=interpret)
+    ohi = np.asarray(ohi).reshape(-1)
+    olo = np.asarray(olo).reshape(-1)
     op = np.asarray(op).reshape(-1)
     # strip padding: valid entries per cell sit at the front
-    keep = np.zeros(ok.shape[0], bool)
-    for t in range(n_tiles):
-        cnt = (bounds_a[t + 1] - bounds_a[t]) + (bounds_b[t + 1] - bounds_b[t])
-        keep[t * 2 * tile: t * 2 * tile + cnt] = True
-    return ok[keep], op[keep]
+    cnt = np.diff(bounds_a) + np.diff(bounds_b)
+    keep = (np.arange(2 * tile)[None, :] < cnt[:, None]).ravel()
+    merged = (ohi.astype(np.uint64) << np.uint64(32)) | olo
+    return _from_u64_order(merged[keep], out_dtype), op[keep]
+
+
+@jax.jit
+def _bloom_hash_jit(lo, hi):
+    return _kernel_hash_pair(lo, hi)
+
+
+def bloom_build_hashes(keys) -> Tuple[np.ndarray, np.ndarray]:
+    """Device-side hash pass for filter *construction* (DESIGN.md §10).
+
+    The ``use_pallas_bloom`` build route: compaction's output-filter rebuild
+    hashes every surviving key through the kernel's own u32 hash family on
+    the accelerator, and ``core.bloom.build_bits`` packs the bitset from the
+    returned pair — bit-identical to ``core.bloom.hash_pair`` (the numpy
+    twin), so probes from either backend agree on the result.
+    """
+    lo, hi = split_u64(keys)
+    h1, h2 = _bloom_hash_jit(lo, hi)
+    return np.asarray(h1), np.asarray(h2)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

@@ -50,6 +50,23 @@ def test_merge_sweep(na, nb, tile):
     assert (back_a == a[(mp[src_a] & 0x7FFFFFFF)]).all()
 
 
+@pytest.mark.parametrize("dt,lo,hi", [(np.int64, -2**60, 2**60),
+                                      (np.int32, -2**31, 2**31 - 1),
+                                      (np.uint64, 0, 2**63)])
+def test_merge_signed_and_wide_dtypes(dt, lo, hi):
+    """Regression: keys wider than 32 bits (and signed keys) must merge via
+    the order-preserving u64 lane map, not a truncating u32 cast."""
+    rng = np.random.default_rng(11)
+    a = np.sort(rng.integers(lo, hi, 700).astype(dt))
+    b = np.sort(rng.integers(lo, hi, 900).astype(dt))
+    mk, mp = merge_runs_tiled(a, b, tile=128)
+    assert mk.dtype == dt
+    assert (mk == np.sort(np.concatenate([a, b]))).all()
+    src_a = (mp >> 31) == 0
+    assert (mk[src_a] == a[mp[src_a] & 0x7FFFFFFF]).all()
+    assert (mk[~src_a] == b[mp[~src_a] & 0x7FFFFFFF]).all()
+
+
 def test_merge_matches_engine_merge():
     """Ties the TPU kernel to the engine's compaction semantics."""
     from repro.core import IOStats, build_run, merge_runs
