@@ -16,10 +16,13 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             bits_per_key: float = 0.0, bloom_allocation: str = "monkey",
             memtable_kb: int = 32, base_kb: int = 128,
             cache_kb: int = 0, pin_l0_kb: int = 0,
-            cache_policy: str = "clock") -> LSMStore:
+            cache_policy: str = "clock",
+            async_compaction: bool = False,
+            compaction_workers: int = 1) -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
     container-scale datasets so the tree reaches realistic depths (L=4..9).
-    ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9)."""
+    ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9);
+    ``async_compaction`` the background scheduler (DESIGN.md §11)."""
     return LSMStore(LSMConfig(
         policy=policy, c=c, T=T,
         memtable_bytes=memtable_kb << 10,
@@ -28,7 +31,9 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
         bloom_allocation=bloom_allocation,
         cache_bytes=cache_kb << 10,
         pin_l0_bytes=pin_l0_kb << 10,
-        cache_policy=cache_policy))
+        cache_policy=cache_policy,
+        async_compaction=async_compaction,
+        compaction_workers=compaction_workers))
 
 
 def cache_hit_pct(delta) -> float:
@@ -62,6 +67,59 @@ def fill_random_batch(db: LSMStore, n: int, value_size: int, seed: int = 1,
         db.put_batch(keys[i:i + batch].tolist(), val)
     db.flush()
     return (time.perf_counter() - t0) / n * 1e6  # us/op
+
+
+def fill_random_batch_async(db: LSMStore, n: int, value_size: int,
+                            seed: int = 1, key_space: Optional[int] = None,
+                            batch: int = 4096) -> Tuple[float, float]:
+    """Same key stream as ``fill_random_batch`` through an *async* store.
+
+    Returns ``(foreground_us_op, total_us_op)``: foreground is the write
+    path the client actually waits on (puts + rotation enqueues, including
+    any write-pressure stalls — compaction is off this path, DESIGN.md
+    §11); total additionally waits for the background pipeline to quiesce,
+    i.e. the same end state the sync path reaches inline.
+
+    Two scheduling knobs are applied for the burst and restored after,
+    mirroring how a production writer thread would be run against a
+    dedicated background pool:
+
+      * the GIL switch interval is raised to 20 ms — at the default 5 ms
+        the worker preempts the writer mid-burst and the two serialize;
+      * the calling thread is pinned off the workers' core (the scheduler
+        pins its workers to the last core of the affinity set; without the
+        complementary pin the OS migrates the writer onto that core
+        mid-burst and they ping-pong).
+    """
+    import os
+    import sys
+
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_space or (n * 8), n, dtype=np.uint64)
+    val = bytes(value_size)
+    prev_switch = sys.getswitchinterval()
+    sys.setswitchinterval(0.02)
+    prev_aff = None
+    try:
+        aff = sorted(os.sched_getaffinity(0))
+        if len(aff) > 1:
+            prev_aff = set(aff)
+            os.sched_setaffinity(0, set(aff[:-1]))
+    except (AttributeError, OSError):
+        pass
+    try:
+        t0 = time.perf_counter()
+        for i in range(0, n, batch):
+            db.put_batch(keys[i:i + batch].tolist(), val)
+        db.flush()                  # rotate + enqueue, does not wait
+        t_fg = time.perf_counter() - t0
+        assert db.wait_for_quiesce(600), "async load failed to quiesce"
+        t_total = time.perf_counter() - t0
+    finally:
+        sys.setswitchinterval(prev_switch)
+        if prev_aff is not None:
+            os.sched_setaffinity(0, prev_aff)
+    return t_fg / n * 1e6, t_total / n * 1e6   # us/op
 
 
 def fill_seq(db: LSMStore, n: int, value_size: int) -> float:

@@ -24,6 +24,15 @@ tree's runs are merged by both compaction paths on the same inputs
 over the ``merge_runs_scalar`` oracle), asserting identical IOStats and
 bit-identical output along the way.
 
+Async-scheduler lane (DESIGN.md §11): the same stream again through an
+``async_compaction=True`` store — ``load_async_kops`` is the *foreground*
+write-path throughput (rotation + enqueue; flush/compaction drain on the
+background worker), ``load_async_speedup`` its gain over the synchronous
+batched load, and ``stall_pct`` the share of that foreground wall clock
+lost to write-pressure stalls (``IOStats.stall_ns``).  After
+``wait_for_quiesce`` the async tree is asserted bit-for-bit equal to the
+synchronous one — the scheduler's determinism contract.
+
 ``--smoke`` runs a seconds-scale configuration exercising every column and
 asserts the write-subsystem columns are present and nonzero (CI uses it to
 keep the benchmark code paths green on every PR).
@@ -35,13 +44,21 @@ import time
 from typing import Dict, List
 
 from .common import (DEFAULT_N, cache_hit_pct, fill_random, fill_random_batch,
-                     fill_seq, make_db, multiget_random, read_random,
-                     scan_random, seek_random)
+                     fill_random_batch_async, fill_seq, make_db,
+                     multiget_random, read_random, scan_random, seek_random)
 
 VALUE_SIZES = (50, 100, 200)   # Zippy/UP2X, UDB/VAR, APP/ETC (paper §4.2.1)
 SCAN_LEN = 100                 # entries per iterator scan (db_bench seek+next)
 CACHE_KB = 2048                # block-cache budget for the cached lane
 PIN_L0_KB = 256                # DRAM-resident L0 budget
+
+
+def assert_trees_equal(db_a, db_b) -> None:
+    """Bit-for-bit level equality — the async scheduler's oracle check
+    (`core.run.levels_bit_equal` is the one definition of tree equality)."""
+    from repro.core.run import levels_bit_equal
+
+    assert levels_bit_equal(db_a._levels, db_b._levels), "async tree diverged"
 
 
 def compact_bench(db) -> Dict[str, float]:
@@ -100,6 +117,37 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
             db_batch = make_db(c=c)
             t_fillbatch = fill_random_batch(db_batch, n, vs)
             assert db_batch.total_entries == db.total_entries
+            # extra sync-batch timings so the async speedup is min-vs-min
+            # over 3 runs each (its own column keeps the single-shot PR-3
+            # methodology; this container's clock is ±30% noisy)
+            t_fillbatch_best = t_fillbatch
+            for _ in range(2):
+                db_batch2 = make_db(c=c)
+                t_fillbatch_best = min(t_fillbatch_best,
+                                       fill_random_batch(db_batch2, n, vs))
+                del db_batch2
+            # ---- async-scheduler lane: same stream, background pipeline ----
+            # best-of-3 fresh stores (this container's wall clock is noisy,
+            # and min() is the standard estimator — same as compact_bench)
+            t_fillasync_fg = t_fillasync_total = float("inf")
+            stall_pct = 0.0
+            for _ in range(3):
+                db_async = make_db(c=c, async_compaction=True)
+                # bulk-load tuning, as RocksDB documents for offline
+                # ingest: soft pressure off, hard stall sized to the whole
+                # burst (the steady-state defaults are for mixed
+                # read/write traffic where deep immutable backlogs would
+                # tax every read)
+                db_async.config.slowdown_trigger = 0
+                rotations = n * (vs + 16) // db_async.config.memtable_bytes
+                db_async.config.stall_trigger = max(256, rotations + 64)
+                fg, total = fill_random_batch_async(db_async, n, vs)
+                assert_trees_equal(db_batch, db_async)
+                if fg < t_fillasync_fg:
+                    t_fillasync_fg, t_fillasync_total = fg, total
+                    stall_pct = (100.0 * db_async.stats.stall_ns
+                                 / max(fg * n * 1e3, 1.0))
+                db_async.close()
             compact = compact_bench(db)
             key_space = n * 8
             s0 = db.stats.snapshot()
@@ -131,6 +179,12 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
                 load_batch_kops=(1e3 / t_fillbatch) if t_fillbatch else 0.0,
                 load_batch_speedup=(t_fillrand / t_fillbatch
                                     if t_fillbatch else 0.0),
+                load_async_kops=(1e3 / t_fillasync_fg
+                                 if t_fillasync_fg else 0.0),
+                load_async_speedup=(t_fillbatch_best / t_fillasync_fg
+                                    if t_fillasync_fg else 0.0),
+                load_async_total_us=t_fillasync_total,
+                stall_pct=stall_pct,
                 compact_mb_s=compact["compact_mb_s"],
                 compact_speedup=compact["compact_speedup"],
                 readrandom_us=t_read, seekrandom_us=t_seek,
@@ -152,10 +206,13 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
     return rows
 
 
-def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False):
+def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
+         json_path: str = None):
     rows = run(n, value_sizes)
     hdr = ("system,value_size,levels,fillseq_us,fillrandom_us,"
-           "load_batch_kops,load_batch_speedup,compact_mb_s,compact_speedup,"
+           "load_batch_kops,load_batch_speedup,load_async_kops,"
+           "load_async_speedup,stall_pct,"
+           "compact_mb_s,compact_speedup,"
            "readrandom_us,"
            "seekrandom_us,seeknext10_us,seeknext100_us,multiget_us,"
            "multiget_speedup,scanscalar100_us,iterscan100_us,"
@@ -166,6 +223,8 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False):
         print(f"{r['system']},{r['value_size']},{r['levels']},"
               f"{r['fillseq_us']:.2f},{r['fillrandom_us']:.2f},"
               f"{r['load_batch_kops']:.1f},{r['load_batch_speedup']:.1f},"
+              f"{r['load_async_kops']:.1f},{r['load_async_speedup']:.1f},"
+              f"{r['stall_pct']:.1f},"
               f"{r['compact_mb_s']:.1f},{r['compact_speedup']:.1f},"
               f"{r['readrandom_us']:.2f},{r['seekrandom_us']:.2f},"
               f"{r['seeknext10_us']:.2f},{r['seeknext100_us']:.2f},"
@@ -181,8 +240,35 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False):
         for r in rows:
             assert r["load_batch_kops"] > 0 and r["load_batch_speedup"] > 0, r
             assert r["compact_mb_s"] > 0 and r["compact_speedup"] > 0, r
+            # async scheduler lane (bit-for-bit vs sync is asserted inline
+            # by run(); here the columns must exist and be sane)
+            assert r["load_async_kops"] > 0 and r["load_async_speedup"] > 0, r
+            assert r["stall_pct"] >= 0, r
         print(f"smoke-ok: load_batch {rows[0]['load_batch_speedup']:.1f}x, "
+              f"load_async {rows[0]['load_async_speedup']:.1f}x "
+              f"(stall {rows[0]['stall_pct']:.1f}%), "
               f"compaction {rows[0]['compact_speedup']:.1f}x")
+    if json_path:
+        import json
+        speedups = [r["load_async_speedup"] for r in rows]
+        geomean = 1.0
+        for s in speedups:
+            geomean *= s
+        geomean **= 1.0 / len(speedups)
+        summary = dict(
+            n=n,
+            load_scalar_us=rows[0]["fillrandom_us"],
+            load_batch_us=(1e3 / rows[0]["load_batch_kops"]
+                           if rows[0]["load_batch_kops"] else 0.0),
+            load_async_speedup_min=min(speedups),
+            load_async_speedup_max=max(speedups),
+            load_async_speedup_geomean=geomean,
+            stall_pct_max=max(r["stall_pct"] for r in rows),
+        )
+        with open(json_path, "w") as f:
+            json.dump(dict(bench="micro_dbbench", summary=summary,
+                           rows=rows), f, indent=1, sort_keys=True)
+        print(f"wrote {json_path}")
     return rows
 
 
@@ -192,8 +278,11 @@ if __name__ == "__main__":
                     help="entries to load per configuration")
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI run covering every column")
+    ap.add_argument("--json", type=str, default=None, metavar="PATH",
+                    help="also dump rows + sync-vs-async summary as JSON "
+                         "(the BENCH_pr*.json perf-trajectory artifacts)")
     args = ap.parse_args()
     if args.smoke:
-        main(n=5_000, value_sizes=(50,), smoke=True)
+        main(n=5_000, value_sizes=(50,), smoke=True, json_path=args.json)
     else:
-        main(n=args.n)
+        main(n=args.n, json_path=args.json)

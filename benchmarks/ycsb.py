@@ -12,6 +12,11 @@ Two extra lanes ride on the read-only workload C tree state:
 and the ``autumn(.8)+cache`` system row runs with the memory subsystem
 (block cache + pinned L0, DESIGN.md §9) enabled, reporting its block-cache
 hit rate (``cachehit_pct``) across the whole workload sweep.
+
+The ``autumn(.8)+async`` row runs the whole sweep with the background
+compaction scheduler (DESIGN.md §11): the load phase reports the
+*foreground* ingest rate (flush/compaction drain on a worker thread) and
+every mixed workload exercises reads racing live background installs.
 """
 from __future__ import annotations
 
@@ -115,22 +120,31 @@ WORKLOADS = {
 }
 
 
-SYSTEMS = (  # (name, c, cache_kb, pin_l0_kb)
-    ("rocksdb", 1.0, 0, 0),
-    ("autumn(.8)", 0.8, 0, 0),
-    ("autumn(.4)", 0.4, 0, 0),
-    ("autumn(.8)+cache", 0.8, 1024, 128),
+SYSTEMS = (  # (name, c, cache_kb, pin_l0_kb, async_compaction)
+    ("rocksdb", 1.0, 0, 0, False),
+    ("autumn(.8)", 0.8, 0, 0, False),
+    ("autumn(.4)", 0.4, 0, 0, False),
+    ("autumn(.8)+cache", 0.8, 1024, 128, False),
+    # background flush/compaction (DESIGN.md §11) at the steady-state
+    # pressure defaults: load_kops is the *foreground* ingest rate, the
+    # workload mixes then run with reads racing live background churn
+    ("autumn(.8)+async", 0.8, 0, 0, True),
 )
 
 
 def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
     rows = []
-    for name, c, cache_kb, pin_l0_kb in SYSTEMS:
+    for name, c, cache_kb, pin_l0_kb, async_c in SYSTEMS:
         db = make_db(c=c, T=5.0, bits_per_key=10, bloom_allocation="monkey",
-                     cache_kb=cache_kb, pin_l0_kb=pin_l0_kb)
+                     cache_kb=cache_kb, pin_l0_kb=pin_l0_kb,
+                     async_compaction=async_c)
         load = _load(db, n)
+        # levels/space_amp need the settled tree; stalls are re-read after
+        # quiesce so the async row's count is deterministic (the background
+        # L0 rate limiter shares the write_stalls counter)
+        assert db.wait_for_quiesce(600), f"{name}: load failed to quiesce"
         row = dict(system=name, load_kops=load["kops"],
-                   stalls=load["stalls"], levels=db.num_levels_in_use,
+                   stalls=db.stats.write_stalls, levels=db.num_levels_in_use,
                    space_amp=db.space_amplification())
         s_sweep = db.stats.snapshot()
         for w, kw in WORKLOADS.items():
@@ -154,8 +168,11 @@ def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
                 row["Cbatch_pallas_kops"] = _mix_batched_reads(
                     db, n, n_ops)["kops"]
                 db.config.use_pallas_bloom = False
+        # drain churn from the last write mix before the sweep-wide stats
+        assert db.wait_for_quiesce(600), f"{name}: sweep failed to quiesce"
         row["cachehit_pct"] = cache_hit_pct(db.stats.delta(s_sweep))
         rows.append(row)
+        db.close()
     return rows
 
 

@@ -15,10 +15,11 @@ from .cache import BlockCache, PinnedLevelManager
 from .engine import LSMConfig, LSMStore
 from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
-from .memtable import Memtable, WriteAheadLog
+from .memtable import ImmutableMemtable, Memtable, WriteAheadLog
 from .policy import (POLICIES, CompactionTask, Garnering, LazyLeveling,
                      Leveling, MergePolicy, QLSMBush, Tiering, make_policy)
 from .run import SortedRun, build_run, merge_runs, merge_runs_scalar
+from .scheduler import CompactionScheduler
 from .types import BLOCK_SIZE, KEY_BYTES, IOStats
 
 __all__ = [
@@ -26,7 +27,7 @@ __all__ = [
     "BloomFilter", "allocate_fprs",
     "bits_for_fpr", "theoretical_fpr", "garnering_theoretical_fprs",
     "zero_result_read_cost", "MergingIterator", "Manifest", "RunStorage",
-    "Version", "Memtable",
+    "Version", "Memtable", "ImmutableMemtable", "CompactionScheduler",
     "WriteAheadLog", "POLICIES", "CompactionTask", "Garnering", "LazyLeveling",
     "Leveling", "MergePolicy", "QLSMBush", "Tiering", "make_policy",
     "SortedRun", "build_run", "merge_runs", "merge_runs_scalar",

@@ -37,6 +37,7 @@ pinned status but may re-enter the cache on demand like any other run.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -46,13 +47,21 @@ CacheKey = Tuple[int, int]  # (run_id, block_id)
 
 
 class BlockCache:
-    """Charged-bytes block cache with LRU or CLOCK (second-chance) eviction."""
+    """Charged-bytes block cache with LRU or CLOCK (second-chance) eviction.
+
+    Thread-safety: one reentrant mutex guards the eviction order, the pinned
+    set, and the byte/hit counters, so reader threads admitting blocks race
+    safely with the async scheduler's post-install :meth:`retain`/
+    :meth:`set_pinned` calls (batched reads take the lock once per batch,
+    not per block).
+    """
 
     def __init__(self, capacity_bytes: int, policy: str = "clock"):
         if policy not in ("lru", "clock"):
             raise ValueError(f"unknown cache policy {policy!r}")
         self.capacity_bytes = int(capacity_bytes)
         self.policy = policy
+        self._mu = threading.RLock()
         # Eviction order: front = next eviction candidate. CLOCK entries carry
         # a reference bit; the "hand" is the front of the same ordered dict
         # (a second chance moves the entry to the back with its bit cleared).
@@ -93,25 +102,26 @@ class BlockCache:
         makes — and admitted, evicting cold entries to stay within
         ``capacity_bytes``.
         """
-        key = (run_id, block_id)
-        if key in self._pinned:
-            self.hits += 1
-            stats.cache_hit_blocks += 1
-            return True
-        e = self._entries.get(key)
-        if e is not None:
-            self.hits += 1
-            stats.cache_hit_blocks += 1
-            if self.policy == "lru":
-                self._entries.move_to_end(key)
-            else:
-                e[1] = 1  # clock reference bit
-            return True
-        self.misses += 1
-        stats.cache_miss_blocks += 1
-        stats.blocks_read += 1
-        self._admit(key, nbytes)
-        return False
+        with self._mu:
+            key = (run_id, block_id)
+            if key in self._pinned:
+                self.hits += 1
+                stats.cache_hit_blocks += 1
+                return True
+            e = self._entries.get(key)
+            if e is not None:
+                self.hits += 1
+                stats.cache_hit_blocks += 1
+                if self.policy == "lru":
+                    self._entries.move_to_end(key)
+                else:
+                    e[1] = 1  # clock reference bit
+                return True
+            self.misses += 1
+            stats.cache_miss_blocks += 1
+            stats.blocks_read += 1
+            self._admit(key, nbytes)
+            return False
 
     def read_blocks(self, run_id: int, block_ids, block_bytes,
                     stats: IOStats) -> int:
@@ -124,33 +134,34 @@ class BlockCache:
         lazily (``block_bytes(bid)``, typically ``SortedRun.block_bytes``)
         only on a miss.  Returns the number of hits.
         """
-        pinned = self._pinned
-        entries = self._entries
-        lru = self.policy == "lru"
-        move = entries.move_to_end
-        get = entries.get
-        hits = misses = 0
-        for bid in block_ids:
-            key = (run_id, bid)
-            if key in pinned:
-                hits += 1
-                continue
-            e = get(key)
-            if e is not None:
-                hits += 1
-                if lru:
-                    move(key)
-                else:
-                    e[1] = 1
-                continue
-            misses += 1
-            self._admit(key, block_bytes(bid))
-        self.hits += hits
-        self.misses += misses
-        stats.cache_hit_blocks += hits
-        stats.cache_miss_blocks += misses
-        stats.blocks_read += misses
-        return hits
+        with self._mu:
+            pinned = self._pinned
+            entries = self._entries
+            lru = self.policy == "lru"
+            move = entries.move_to_end
+            get = entries.get
+            hits = misses = 0
+            for bid in block_ids:
+                key = (run_id, bid)
+                if key in pinned:
+                    hits += 1
+                    continue
+                e = get(key)
+                if e is not None:
+                    hits += 1
+                    if lru:
+                        move(key)
+                    else:
+                        e[1] = 1
+                    continue
+                misses += 1
+                self._admit(key, block_bytes(bid))
+            self.hits += hits
+            self.misses += misses
+            stats.cache_hit_blocks += hits
+            stats.cache_miss_blocks += misses
+            stats.blocks_read += misses
+            return hits
 
     def read_block_span(self, run_id: int, first_block: int, last_block: int,
                         block_bytes, stats: IOStats) -> int:
@@ -204,30 +215,33 @@ class BlockCache:
         move from the cache budget to the pin budget); blocks leaving the set
         simply lose residency and re-enter the cache on demand.
         """
-        self._pinned = dict(blocks)
-        self._pinned_bytes = sum(self._pinned.values())
-        for key in self._pinned:
-            e = self._entries.pop(key, None)
-            if e is not None:
-                self._bytes -= e[0]
+        with self._mu:
+            self._pinned = dict(blocks)
+            self._pinned_bytes = sum(self._pinned.values())
+            for key in self._pinned:
+                e = self._entries.pop(key, None)
+                if e is not None:
+                    self._bytes -= e[0]
 
     # ------------------------------------------------------------ invalidation
     def retain(self, live_run_ids: Iterable[int]) -> None:
         """Drop every cached block belonging to a run that no longer exists."""
-        live = set(live_run_ids)
-        dead = [k for k in self._entries if k[0] not in live]
-        for k in dead:
-            self._bytes -= self._entries.pop(k)[0]
-        dead_p = [k for k in self._pinned if k[0] not in live]
-        for k in dead_p:
-            self._pinned_bytes -= self._pinned.pop(k)
+        with self._mu:
+            live = set(live_run_ids)
+            dead = [k for k in self._entries if k[0] not in live]
+            for k in dead:
+                self._bytes -= self._entries.pop(k)[0]
+            dead_p = [k for k in self._pinned if k[0] not in live]
+            for k in dead_p:
+                self._pinned_bytes -= self._pinned.pop(k)
 
     def clear(self) -> None:
         """Drop everything (process restart: DRAM contents are volatile)."""
-        self._entries.clear()
-        self._pinned.clear()
-        self._bytes = 0
-        self._pinned_bytes = 0
+        with self._mu:
+            self._entries.clear()
+            self._pinned.clear()
+            self._bytes = 0
+            self._pinned_bytes = 0
 
 
 class PinnedLevelManager:
@@ -265,9 +279,12 @@ class PinnedLevelManager:
                 blocks[(run.run_id, bid)] = run.block_bytes(bid)
         if stats is not None:
             # one batched pass: blocks not already resident are real reads
-            missing = sum(1 for key in blocks if key not in self.cache)
-            self.cache.misses += missing    # keep hit_rate() in step with
-            stats.cache_miss_blocks += missing  # the IOStats accounting
+            # (counted under the cache mutex — hits/misses are shared with
+            # concurrent reader threads' locked increments)
+            with self.cache._mu:
+                missing = sum(1 for key in blocks if key not in self.cache)
+                self.cache.misses += missing    # keep hit_rate() in step
+            stats.cache_miss_blocks += missing  # with IOStats accounting
             stats.blocks_read += missing
         self.pinned_run_ids = pinned_ids
         self.cache.set_pinned(blocks)

@@ -5,10 +5,24 @@ Composes memtable + WAL, immutable sorted runs, a pluggable merge policy
 RocksDB-style L0 rate limiter.  All reads/writes are accounted in the block
 I/O cost model (types.IOStats) so the paper's Table 2 complexities can be
 validated empirically.
+
+With ``LSMConfig.async_compaction`` the flush/compaction pipeline moves off
+the write path onto a background ``CompactionScheduler`` (DESIGN.md §11):
+full memtables rotate into a readable immutable queue, workers install
+versions in the exact synchronous order (sync mode stays the bit-for-bit
+differential oracle after ``wait_for_quiesce``), and write pressure is
+governed by ``slowdown_trigger``/``stall_trigger``.  The engine is
+single-writer multi-reader: one thread writes; readers are lock-free on
+copy-on-write level/queue references and immutable runs.  IOStats counters
+are updated from both foreground and worker threads without a lock — the
+GIL keeps them consistent enough for a cost model, and none of the
+differential oracles compare counters across threading modes.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -17,13 +31,21 @@ from .bloom import allocate_fprs, bits_for_fpr
 from .cache import BlockCache, PinnedLevelManager
 from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
-from .memtable import Memtable, WriteAheadLog
+from .memtable import ImmutableMemtable, Memtable, WriteAheadLog
 from .policy import CompactionTask, MergePolicy, make_policy
 from .run import SortedRun, build_run, merge_runs
+from .scheduler import CompactJob, CompactionScheduler, FlushJob
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
                     TOMBSTONE_LEN, IOStats)
 
 _UNSET = object()
+# Soft write-pressure delay.  LevelDB sleeps 1 ms here, but its pressure unit
+# is a 4 MB L0 file; ours is a ~32 KB memtable whose whole fill takes well
+# under 1 ms — and on coarse-tick kernels (CONFIG_HZ=100) any nonzero sleep
+# rounds up to a full 1-10 ms scheduler tick.  sleep(0) instead *yields* the
+# GIL and the CPU slice to the compaction workers, which is the actual goal
+# of the soft trigger; the hard stall_trigger remains the memory backstop.
+_SLOWDOWN_SLEEP_S = 0.0
 
 
 @dataclasses.dataclass
@@ -50,6 +72,23 @@ class LSMConfig:
     pin_l0_bytes: int = 0               # DRAM-resident L0 budget (paper's
                                         # "bounded space of DRAM"); 0 => none
     cache_policy: str = "clock"         # "clock" (second-chance) | "lru"
+    async_compaction: bool = False      # pipeline flush+compaction onto
+                                        # background workers (DESIGN.md §11);
+                                        # False == today's synchronous engine,
+                                        # the differential oracle
+    compaction_workers: int = 1         # background worker threads
+    slowdown_trigger: int = 64          # queued L0 runs + immutable memtables
+                                        # beyond which each rotation yields
+                                        # its CPU slice to the workers (soft
+                                        # pressure); <=0 disables.  Triggers
+                                        # count ~memtable_bytes units, so 64
+                                        # = ~2 MiB of deferred flushes at the
+                                        # default write buffer
+    stall_trigger: int = 256            # ... beyond which rotation blocks
+                                        # until the backlog drains below the
+                                        # trigger or the workers go idle
+                                        # (hard pressure, ~8 MiB memory
+                                        # backstop); <=0 disables
 
 
 class LSMStore:
@@ -71,6 +110,16 @@ class LSMStore:
         self._pallas_probe_fn = _UNSET  # lazy: resolved on first multi_get
         self._pallas_hash_fn = _UNSET   # lazy: resolved on first filter build
         self._pallas_merge_fn = _UNSET  # lazy: resolved on first compaction
+        # Async compaction (DESIGN.md §11): rotated memtables queue here
+        # (oldest first) and stay readable until their background flush
+        # installs; the maintenance lock serializes the gc+retain+repin
+        # triplet between worker installs and snapshot releases.
+        self._imm: List[ImmutableMemtable] = []
+        self._maint_lock = threading.Lock()
+        self._scheduler: Optional[CompactionScheduler] = None
+        if self.config.async_compaction:
+            self._scheduler = CompactionScheduler(
+                self, self.config.compaction_workers)
         self.block_cache: Optional[BlockCache] = None
         self.pinned_l0: Optional[PinnedLevelManager] = None
         if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
@@ -99,7 +148,8 @@ class LSMStore:
         self.block_cache = BlockCache(cache_bytes, policy)
         self.pinned_l0 = PinnedLevelManager(self.block_cache, pin_l0_bytes)
         # attaching mid-life: resident L0 blocks must be loaded (charged)
-        self.pinned_l0.repin(self._levels[0], stats=self.stats)
+        with self._maint_lock:
+            self.pinned_l0.repin(self._levels[0], stats=self.stats)
 
     # ------------------------------------------------------------- writes
     def put(self, key: int, value: bytes):
@@ -116,7 +166,7 @@ class LSMStore:
             self.wal.fsync(self.stats)
         self.memtable.put(int(key), self._seq, value)
         if self.memtable.is_full():
-            self.flush()
+            self._on_memtable_full()
 
     # ------------------------------------------------------- batched writes
     def put_batch(self, keys, values) -> None:
@@ -181,11 +231,34 @@ class LSMStore:
             self.memtable.put_batch(keys_l[i:j], chunk_vals, first_seq,
                                     added=int(cum[j - 1] - base))
             if self.memtable.is_full():
-                self.flush()
+                self._on_memtable_full()
             i = j
 
+    def _on_memtable_full(self):
+        """Full write buffer: flush inline (sync) or rotate + enqueue (async).
+
+        Rotation happens at exactly the point the synchronous engine would
+        flush, so the memtable contents handed to the background worker are
+        identical to what the sync path freezes — the root of the
+        differential-oracle guarantee (DESIGN.md §11).
+        """
+        if self._scheduler is None:
+            self.flush()
+        else:
+            self._rotate()
+
     def flush(self):
-        """Freeze the memtable into an L0 run (no merge — §3.2 L0 tiering)."""
+        """Freeze the memtable into an L0 run (no merge — §3.2 L0 tiering).
+
+        Async mode (``LSMConfig.async_compaction``): the call only rotates
+        the memtable into the immutable queue and returns — the run build,
+        version install, and any triggered compactions all happen on the
+        scheduler's workers.  ``wait_for_quiesce`` blocks until that
+        background pipeline drains.
+        """
+        if self._scheduler is not None:
+            self._rotate()
+            return
         if len(self.memtable) == 0:
             return
         # Rate limiter: too many L0 runs => write stall until compaction.
@@ -198,29 +271,243 @@ class LSMStore:
         self.memtable.clear()
         self.wal.truncate()
         if len(run):
-            self._levels[0].append(run)  # newest last
+            levels = [list(lvl) for lvl in self._levels]
+            levels[0].append(run)  # newest last
+            self._levels = levels  # atomic swap: readers never see a torn L0
             self._commit()
         self._compact_until_quiet()
 
+    # ------------------------------------------------- async rotation path
+    def _rotate(self):
+        """Foreground half of a pipelined flush (async mode).
+
+        Applies write-pressure control, fsyncs the WAL (the rotated
+        segment's durability point — same one-fsync-per-flush cadence as the
+        sync path), freezes the memtable + WAL pair into the immutable
+        queue where it stays readable, and enqueues the background
+        :class:`FlushJob`.  The engine is single-writer: only the foreground
+        thread rotates, only scheduler workers install.
+        """
+        if len(self.memtable) == 0:
+            return
+        self._throttle()
+        self.wal.fsync(self.stats)
+        imm = ImmutableMemtable(self.memtable, self.wal)
+        with self._scheduler.lock:
+            self._imm = self._imm + [imm]   # copy-on-write: readers hold refs
+        self.memtable = Memtable(self.config.memtable_bytes,
+                                 self.config.key_bytes,
+                                 self.config.block_size)
+        self.wal = WriteAheadLog()
+        self._scheduler.submit(FlushJob(imm))
+
+    def _throttle(self):
+        """LevelDB-style write-pressure control at rotation points.
+
+        Pressure = queued L0 runs + immutable memtables.  At
+        ``slowdown_trigger`` each rotation yields its CPU slice to the
+        workers (see ``_SLOWDOWN_SLEEP_S``); at ``stall_trigger`` the
+        rotation blocks until the scheduler drains below the trigger (or
+        goes idle — steady-state L0 pressure cannot drain further).  Both
+        charge ``IOStats.stall_ns`` so benchmarks can report the foreground
+        time actually lost to pressure (``stall_pct``).
+        """
+        cfg = self.config
+        depth = len(self._imm) + len(self._levels[0])
+        t0 = time.perf_counter_ns()
+        if cfg.stall_trigger > 0 and depth >= cfg.stall_trigger:
+            self.stats.write_stalls += 1
+            # A stall only waits while the background can still shrink the
+            # backlog; once the scheduler is idle the pressure is the tree's
+            # steady state (e.g. L0 legitimately holds l0_trigger-1 runs)
+            # and waiting longer would deadlock the writer.
+            sched = self._scheduler
+            sched.wait_until(
+                lambda: sched.idle()
+                or (len(self._imm) + len(self._levels[0]))
+                < cfg.stall_trigger)
+        elif cfg.slowdown_trigger > 0 and depth >= cfg.slowdown_trigger:
+            self.stats.write_slowdowns += 1
+            time.sleep(_SLOWDOWN_SLEEP_S)
+        else:
+            return
+        self.stats.stall_ns += time.perf_counter_ns() - t0
+
+    def wait_for_quiesce(self, timeout: Optional[float] = None) -> bool:
+        """Block until all background flush/compaction work has drained.
+
+        After a True return the tree (levels, keys, seqs, values) is
+        state-identical to the synchronous engine's for the same op
+        sequence — the async-vs-sync differential contract.  The active
+        (unrotated) memtable is *not* flushed; call ``flush()`` first to
+        rotate it.  Sync mode returns True immediately.
+        """
+        if self._scheduler is None:
+            return True
+        return self._scheduler.wait_for_quiesce(timeout)
+
+    def close(self) -> None:
+        """Drain and stop the background workers (async mode).
+
+        The store stays fully usable afterwards — it simply reverts to the
+        synchronous flush/compaction path, which is state-equivalent.  Used
+        by tests and benchmarks so short-lived stores don't accumulate
+        parked worker threads.  No-op in sync mode.
+        """
+        if self._scheduler is None:
+            return
+        try:
+            self._scheduler.wait_for_quiesce()   # raises on a dead pipeline
+        finally:
+            self._scheduler.shutdown()
+            self._scheduler = None
+            if self._imm:
+                # A dead pipeline left rotated memtables stranded (the
+                # exception fired before their flush installed).  The sync
+                # path never reads the immutable queue, so fold them back
+                # into the active WAL + memtable — durability and readable
+                # state unchanged.
+                self._consolidate_imm_wal()
+
+    def _consolidate_imm_wal(self) -> None:
+        """Fold the immutable queue's WAL segments into one active log.
+
+        Segment concatenation (oldest first, active last) is record
+        concatenation, so replay order equals write order; the rotated
+        segments were fully fsynced at rotation, so the consolidated synced
+        watermark is their total length plus the active WAL's own
+        watermark.  The memtable is rebuilt by replaying every record
+        (including the unsynced tail — that is live process state, exactly
+        what the active memtable held).  Shared by ``recover`` and the
+        failed-pipeline ``close`` fold-back so the durability bookkeeping
+        cannot drift between them.
+        """
+        wal = WriteAheadLog()
+        buf = bytearray()
+        synced = 0
+        for imm in self._imm:
+            buf += imm.wal._buf
+            synced += len(imm.wal._buf)       # fully fsynced at rotation
+        synced += self.wal._synced_upto
+        buf += self.wal._buf
+        wal._buf = buf
+        wal._synced_upto = synced
+        self.wal = wal
+        self._imm = []
+        self.memtable = Memtable(self.config.memtable_bytes,
+                                 self.config.key_bytes,
+                                 self.config.block_size)
+        for op, key, seq, value in self.wal.records():
+            self._seq = max(self._seq, seq)
+            self.memtable.put(key, seq, None if op == 1 else value)
+
+    # --------------------------------------------------- background applies
+    def _bg_flush(self, imm: ImmutableMemtable) -> Optional[CompactJob]:
+        """Worker-thread half of a pipelined flush.
+
+        Replicates the synchronous ``flush`` body step for step (rate
+        limiter before the run build, install, then compaction planning) so
+        the level trajectory is bit-for-bit the sync engine's.  Returns the
+        compaction continuation job; the scheduler front-queues it ahead of
+        any later flushes.
+        """
+        sched = self._scheduler
+        if len(self._levels[0]) >= self.config.l0_stop_writes_trigger:
+            self.stats.write_stalls += 1
+            self._compact_until_quiet()
+        if sched.aborting:
+            return None     # crash in progress: imm stays queued for replay
+        run = imm.memtable.to_run(self._bits_for_level(0), self.stats,
+                                  hash_fn=self._bloom_hash_fn())
+        if len(run):
+            levels = [list(lvl) for lvl in self._levels]
+            levels[0].append(run)  # newest last
+            self._levels = levels
+            self._commit()
+        # Only now drop the readable immutable memtable: between install and
+        # pop a reader may see the entries twice (same seq, same value) but
+        # never zero times.  The WAL segment retires with it — the data is
+        # durable in the manifest as of _commit's fsync.
+        with sched.lock:
+            self._imm = [m for m in self._imm if m is not imm]
+            sched.lock.notify_all()     # wake write-pressure waiters
+        self.stats.bg_flushes += 1
+        return CompactJob()
+
+    def _bg_compact_one(self) -> Optional[CompactionTask]:
+        """Plan + apply one compaction task (worker thread).
+
+        The input version is pinned for the duration of the merge — exactly
+        the retention ``_commit``'s cache-invalidation protocol assumes —
+        so concurrent snapshot releases can never GC the input runs
+        mid-merge; the pin is released (and GC + cache retention re-run)
+        whether the apply succeeds, goes stale, or aborts.
+        """
+        if self._scheduler.aborting:
+            return None
+        pinned = self.manifest.pin_current()
+        try:
+            task = self._plan_one()
+            if task is None or not self._apply(task):
+                return None
+            self.stats.bg_compactions += 1
+            return task
+        finally:
+            if self.manifest.unpin(pinned.version_id):
+                with self._maint_lock:
+                    self.manifest.gc()
+                    if self.block_cache is not None:
+                        self.block_cache.retain(self.storage.ids())
+
     # -------------------------------------------------------- compactions
-    def _compact_until_quiet(self):
+    def _plan_one(self) -> Optional[CompactionTask]:
+        """Generate the next compaction task against the current tree.
+
+        Task generation is decoupled from apply (DESIGN.md §11): the
+        returned task captures its source level's run ids so a (stale)
+        apply against a changed tree is refused rather than silently
+        merging the wrong runs.  The synchronous loop and the scheduler's
+        CompactJob both plan immediately before applying, so staleness is a
+        discipline check, not an expected path.
+        """
         sizes = [[r.data_bytes for r in lvl] for lvl in self._levels]
+        new_L, task, delayed = self.policy.plan(
+            sizes, self._max_level, self.config.base_level_bytes)
+        if delayed:
+            self.stats.delayed_last_level_compactions += delayed
+        self._max_level = max(self._max_level, new_L)
+        if task is None:
+            return None
+        srcs = (self._levels[task.src_level]
+                if task.src_level < len(self._levels) else [])
+        return dataclasses.replace(
+            task, src_run_ids=tuple(r.run_id for r in srcs))
+
+    def _compact_until_quiet(self):
         while True:
-            new_L, task, delayed = self.policy.plan(
-                sizes, self._max_level, self.config.base_level_bytes)
-            if delayed:
-                self.stats.delayed_last_level_compactions += delayed
-            self._max_level = max(self._max_level, new_L)
+            if self._scheduler is not None and self._scheduler.aborting:
+                return      # crash in progress: bail at the task boundary
+            task = self._plan_one()
             if task is None:
                 return
             self._apply(task)
-            sizes = [[r.data_bytes for r in lvl] for lvl in self._levels]
 
-    def _apply(self, task: CompactionTask):
-        while len(self._levels) <= task.dst_level:
-            self._levels.append([])
-        srcs = self._levels[task.src_level]
-        dsts = self._levels[task.dst_level] if task.include_dst else []
+    def _apply(self, task: CompactionTask) -> bool:
+        """Merge the task's inputs and install the result as a new version.
+
+        The merged level lists are built copy-on-write and published with
+        one reference assignment, so concurrent readers either see the old
+        version or the new one — never a torn intermediate (async mode's
+        lock-free read contract).  Returns False without mutating anything
+        if the task's captured inputs no longer match the tree.
+        """
+        levels = [list(lvl) for lvl in self._levels]
+        while len(levels) <= task.dst_level:
+            levels.append([])
+        srcs = levels[task.src_level]
+        if not task.matches(srcs):
+            return False
+        dsts = levels[task.dst_level] if task.include_dst else []
         deepest = self._deepest_nonempty()
         drop_tombs = task.include_dst and task.dst_level >= deepest
         merged = merge_runs(srcs + dsts, self._bits_for_level(task.dst_level),
@@ -229,13 +516,15 @@ class LSMStore:
                             key_bytes=self.config.key_bytes,
                             pair_merge=self._pair_merge_fn(),
                             bloom_hash=self._bloom_hash_fn())
-        self._levels[task.src_level] = []
+        levels[task.src_level] = []
         if task.include_dst:
-            self._levels[task.dst_level] = [merged] if len(merged) else []
+            levels[task.dst_level] = [merged] if len(merged) else []
         elif len(merged):
-            self._levels[task.dst_level].append(merged)
+            levels[task.dst_level].append(merged)
+        self._levels = levels
         self._max_level = max(self._max_level, task.dst_level)
         self._commit()
+        return True
 
     def _deepest_nonempty(self) -> int:
         deepest = 1
@@ -248,13 +537,19 @@ class LSMStore:
     def _commit(self):
         self.manifest.commit(self._levels, self._max_level, self._seq, self.stats)
         self.manifest.fsync(self.stats)
-        self.manifest.gc()
-        if self.block_cache is not None:
-            # Invalidation protocol (DESIGN.md §9): drop blocks of runs that
-            # compaction retired (snapshot-pinned runs stay live in storage),
-            # then re-derive the DRAM-resident L0 from the new version.
-            self.block_cache.retain(self.storage.ids())
-            self.pinned_l0.repin(self._levels[0])
+        with self._maint_lock:
+            # The gc + retain + repin triplet must not interleave with a
+            # concurrent snapshot release (or another install): a retain
+            # computed from a stale id set could drop blocks the newer
+            # version just pinned.
+            self.manifest.gc()
+            if self.block_cache is not None:
+                # Invalidation protocol (DESIGN.md §9): drop blocks of runs
+                # that compaction retired (snapshot-pinned runs stay live in
+                # storage), then re-derive the DRAM-resident L0 from the new
+                # version.
+                self.block_cache.retain(self.storage.ids())
+                self.pinned_l0.repin(self._levels[0])
 
     # -------------------------------------------------------------- bloom
     def _bits_for_level(self, level: int) -> float:
@@ -283,6 +578,23 @@ class LSMStore:
             return self._levels
         return snapshot.runs(self.storage)
 
+    def _mem_sources(self) -> List[Memtable]:
+        """Memtables in resolution order: active, then immutables newest
+        first (the rotation queue's read window, DESIGN.md §11).  The lists
+        are copy-on-write, so capturing the reference is a consistent view;
+        in sync mode this is always just the active memtable.
+
+        Capture order matters: the active memtable must be read *before*
+        the immutable list — rotation publishes in the opposite order
+        (append to the queue, then swap the active) — so a racing reader's
+        worst case is seeing the rotated memtable twice (benign: identical
+        entries, newest-first dedup), never zero times."""
+        active = self.memtable
+        imm = self._imm
+        if not imm:
+            return [active]
+        return [active] + [m.memtable for m in reversed(imm)]
+
     def _runs_newest_first(self, levels: List[List[SortedRun]]):
         for r in reversed(levels[0]):
             yield r
@@ -293,9 +605,19 @@ class LSMStore:
     def get(self, key: int, snapshot: Optional[Version] = None) -> Optional[bytes]:
         self.stats.point_reads += 1
         if snapshot is None:
-            hit = self.memtable.get(int(key))
-            if hit is not None:
-                return hit[1]
+            # active captured BEFORE the imm check (the rotation publish
+            # order makes this safe — see _mem_sources); the empty-queue
+            # fast path keeps the sync hot read loop allocation-free
+            active = self.memtable
+            if not self._imm:
+                hit = active.get(int(key))
+                if hit is not None:
+                    return hit[1]
+            else:
+                for mt in self._mem_sources():
+                    hit = mt.get(int(key))
+                    if hit is not None:
+                        return hit[1]
         use_bloom = self.config.bits_per_key > 0
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if len(run) == 0:
@@ -377,17 +699,19 @@ class LSMStore:
         results: List[Optional[bytes]] = [None] * n
         if n == 0:
             return results
-        if snapshot is None and len(self.memtable):
-            keep = []
-            for j in range(n):
-                hit = self.memtable.get(int(keys_arr[j]))
-                if hit is not None:
-                    results[j] = hit[1]    # value, or None for a tombstone
-                else:
-                    keep.append(j)
-            pending = np.asarray(keep, dtype=np.int64)
-        else:
-            pending = np.arange(n, dtype=np.int64)
+        pending = np.arange(n, dtype=np.int64)
+        if snapshot is None:
+            for mt in self._mem_sources():
+                if len(mt) == 0 or pending.size == 0:
+                    continue
+                keep = []
+                for j in pending:
+                    hit = mt.get(int(keys_arr[j]))
+                    if hit is not None:
+                        results[int(j)] = hit[1]   # value, or None: tombstone
+                    else:
+                        keep.append(int(j))
+                pending = np.asarray(keep, dtype=np.int64)
         use_bloom = self.config.bits_per_key > 0
         probe_fn = self._bloom_probe_fn()
         for run in self._runs_newest_first(self._read_state(snapshot)):
@@ -408,9 +732,20 @@ class LSMStore:
     def seek(self, key: int, snapshot: Optional[Version] = None) -> Optional[int]:
         """Position a merging iterator at the first key >= key (db_bench Seek).
 
-        Cost: one seek + one block read per run with a valid position."""
+        Cost: one seek + one block read per run with a valid position.
+
+        Tombstone handling is approximate (a cost probe, not a correctness
+        surface — ``scan`` is): memtable entries are liveness-filtered but
+        run entries are not, so a deleted key stops shadowing once its
+        tombstone flushes.  In async mode that transition happens on the
+        background worker's schedule rather than at an explicit ``flush``
+        call; use ``scan``/``iterator`` where exact liveness matters."""
         self.stats.range_reads += 1
         best: Optional[int] = None
+        # memtables BEFORE levels: the install protocol publishes the L0 run
+        # first and pops the immutable memtable second, so this capture order
+        # makes the race a benign duplicate, never a lost read (_mem_sources)
+        mems = self._mem_sources() if snapshot is None else []
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if len(run) == 0:
                 continue
@@ -423,8 +758,8 @@ class LSMStore:
                 k = int(run.keys[i])
                 if best is None or k < best:
                     best = k
-        if snapshot is None:
-            for k, s, v in self.memtable.scan(int(key))[:1]:
+        for mt in mems:
+            for k, s, v in mt.scan(int(key))[:1]:
                 if v is not None and (best is None or k < best):
                     best = k
         return best
@@ -439,10 +774,12 @@ class LSMStore:
         by run cursors (memtable updates may be, as in RocksDB iterators pin
         SSTs but here the memtable is shared; take a snapshot for isolation).
         """
+        # memtables BEFORE levels (see seek): worst case a duplicate entry
+        # with the same seq/value, never a lost read
+        mems = self._mem_sources() if snapshot is None else None
         levels = self._read_state(snapshot)
         runs = [r for r in self._runs_newest_first(levels) if len(r)]
-        mem = self.memtable if snapshot is None else None
-        return MergingIterator(runs, memtable=mem, stats=self.stats,
+        return MergingIterator(runs, memtables=mems, stats=self.stats,
                                chunk=chunk, cache=self.block_cache)
 
     def scan(self, start_key: int, count: int,
@@ -468,6 +805,10 @@ class LSMStore:
         run could still hide smaller keys.
         """
         self.stats.range_reads += 1
+        # memtables BEFORE levels (see seek): a flush racing this capture
+        # contributes a duplicate (same seq, same value — the (key, -seq)
+        # merge keeps one), never a lost read
+        mems = self._mem_sources() if snapshot is None else []
         levels = self._read_state(snapshot)
         runs = [r for r in self._runs_newest_first(levels) if len(r)]
         per_run_take = max(count, 1)
@@ -491,8 +832,11 @@ class LSMStore:
                 cand_s.append(s)
                 cand_v.append([None if l[j] == TOMBSTONE_LEN else bytes(v[j, :l[j]])
                                for j in range(len(k))])
-            mem_items = (self.memtable.scan(int(start_key))
-                         if snapshot is None else [])
+            mem_items: List[Tuple[int, int, Optional[bytes]]] = []
+            for mt in mems:
+                # seq numbers resolve duplicates across the rotation queue
+                # inside _merge_candidates' (key, -seq) sort
+                mem_items.extend(mt.scan(int(start_key)))
             merged = self._merge_candidates(cand_k, cand_s, cand_v, mem_items)
             live = [(k, v) for k, v in merged if v is not None and
                     (frontier is None or k <= frontier)][:count]
@@ -544,28 +888,54 @@ class LSMStore:
         Thin wrapper over the manifest's *refcounted* pins: snapshot reads
         stay valid across any number of later flushes/compactions until the
         matching ``release_snapshot``; if several readers snapshot the same
-        version, it stays pinned until the last one releases.
+        version, it stays pinned until the last one releases.  The
+        read-and-pin is atomic under the manifest mutex, so snapshots taken
+        while background compaction churns can never pin a version whose
+        runs a concurrent GC already freed.
         """
-        return self.manifest.pin(self.manifest.current())
+        return self.manifest.pin_current()
 
     def release_snapshot(self, snapshot: Version) -> None:
         """Drop one reader reference (see ``get_snapshot``)."""
         if not self.manifest.unpin(snapshot.version_id):
             return  # other readers still hold the version: nothing can free
-        self.manifest.gc()
-        if self.block_cache is not None:
-            # Runs kept alive only by the released snapshot may be gone now.
-            self.block_cache.retain(self.storage.ids())
+        with self._maint_lock:
+            self.manifest.gc()
+            if self.block_cache is not None:
+                # Runs kept alive only by the released snapshot may be gone.
+                self.block_cache.retain(self.storage.ids())
 
     # ------------------------------------------------------------ recovery
     def crash(self):
-        """Simulate process crash: volatile state is lost."""
+        """Simulate process crash: volatile state is lost.
+
+        Async mode: the scheduler aborts the in-flight job at its next safe
+        point and drops all queued work *before* the volatile wipe, so no
+        half-applied compaction, pinned input version, or orphaned cache
+        entry survives (see ``CompactionScheduler.abort_and_drain``).  The
+        immutable-memtable queue's WAL segments are durable (fully fsynced
+        at rotation) and stay for ``recover`` to replay; the memtable dicts
+        themselves are process state and are rebuilt from those segments.
+        """
+        if self._scheduler is not None:
+            self._scheduler.abort_and_drain()
         self.wal.crash()
+        for imm in self._imm:
+            imm.wal.crash()   # fully synced at rotation: keeps every byte
         self.manifest.crash()
         self.memtable.clear()
 
     def recover(self):
-        """Rebuild volatile state from the durable manifest + WAL."""
+        """Rebuild volatile state from the durable manifest + WAL(s).
+
+        Async mode adds the rotated-but-unflushed WAL segments: they are
+        consolidated (oldest first) ahead of the active WAL into one log —
+        segment concatenation is record concatenation — so replay order
+        equals write order and a *second* crash before the next rotation
+        still recovers everything.  The scheduler survives recovery idle
+        (its queue was drained by ``crash``) and resumes on the next
+        rotation.
+        """
         v = self.manifest.current()
         self._levels = v.runs(self.storage)
         self._max_level = v.max_level
@@ -575,11 +945,13 @@ class LSMStore:
             # from the recovered L0 (charged — these are real device reads)
             # while the unpinned cache refills on demand.
             self.block_cache.clear()
-            self.pinned_l0.repin(self._levels[0], stats=self.stats)
-        self.memtable.clear()
-        for op, key, seq, value in self.wal.records():
-            self._seq = max(self._seq, seq)
-            self.memtable.put(key, seq, None if op == 1 else value)
+            with self._maint_lock:
+                self.pinned_l0.repin(self._levels[0], stats=self.stats)
+        # Post-crash every surviving WAL byte is durable (crash truncated
+        # each segment to its watermark), so consolidation + replay rebuilds
+        # the memtable and advances _seq; with an empty immutable queue this
+        # is exactly the old single-WAL replay.
+        self._consolidate_imm_wal()
 
     # ---------------------------------------------------------------- info
     def cache_summary(self) -> dict:
@@ -613,7 +985,12 @@ class LSMStore:
 
     @property
     def total_entries(self) -> int:
-        return sum(len(r) for lvl in self._levels for r in lvl) + len(self.memtable)
+        # memtables BEFORE levels (see _mem_sources): a racing install can
+        # double-count an in-flight flush, never drop it
+        mems = self._mem_sources()
+        levels = self._levels
+        return sum(len(r) for lvl in levels for r in lvl) \
+            + sum(len(mt) for mt in mems)
 
     def _live_profile(self) -> Tuple[int, int]:
         """(live entry count, live logical bytes) of the newest versions.
@@ -627,12 +1004,16 @@ class LSMStore:
         """
         parts_k: List[np.ndarray] = []
         parts_vl: List[np.ndarray] = []
-        mem = self.memtable._data
-        if mem:
-            parts_k.append(np.fromiter(mem.keys(), KEY_DTYPE, len(mem)))
-            parts_vl.append(np.fromiter(
-                (TOMBSTONE_LEN if v is None else len(v)
-                 for _, v in mem.values()), np.int64, len(mem)))
+        for mt in self._mem_sources():   # active, then immutables newest 1st
+            # consistent point-in-time copy (the active memtable may be
+            # racing the writer thread; see Memtable.snapshot_items)
+            items = mt.snapshot_items()
+            if items:
+                parts_k.append(np.fromiter((k for k, _, _ in items),
+                                           KEY_DTYPE, len(items)))
+                parts_vl.append(np.fromiter(
+                    (TOMBSTONE_LEN if v is None else len(v)
+                     for _, _, v in items), np.int64, len(items)))
         for run in self._runs_newest_first(self._levels):
             if len(run):
                 parts_k.append(run.keys)
@@ -659,8 +1040,9 @@ class LSMStore:
     def space_amplification(self) -> float:
         """Physical bytes stored / logical bytes of the live newest versions
         (RocksDB's definition; 1.0 when nothing is live)."""
+        mems = self._mem_sources()      # memtables BEFORE levels, as above
         phys = sum(r.data_bytes for lvl in self._levels for r in lvl) \
-            + self.memtable.size_bytes
+            + sum(mt.size_bytes for mt in mems)
         logical = self._live_profile()[1]
         if logical == 0:
             return 1.0

@@ -110,11 +110,20 @@ class MergingIterator:
     def __init__(self, runs: Sequence[SortedRun],
                  memtable: Optional[Memtable] = None,
                  stats: Optional[IOStats] = None,
-                 chunk: int = _MAX_WINDOW, cache=None):
+                 chunk: int = _MAX_WINDOW, cache=None,
+                 memtables: Optional[Sequence[Memtable]] = None):
+        """``memtables`` (newest first) supersedes ``memtable`` when given:
+        the async engine passes [active, imm_newest, ..., imm_oldest] so the
+        immutable-memtable queue stays visible between the active memtable
+        and L0 (DESIGN.md §11); duplicates resolve newest-memtable-wins at
+        seek time, so the merge core still sees one memtable stream."""
         self.stats = stats if stats is not None else IOStats()
         self._cursors: List[_RunCursor] = [
             _RunCursor(r, self.stats, cache) for r in runs if len(r)]
-        self._memtable = memtable
+        if memtables is None:
+            memtables = [memtable] if memtable is not None else []
+        self._memtables: List[Memtable] = [m for m in memtables
+                                           if m is not None]
         self._mem_keys = np.zeros(0, dtype=KEY_DTYPE)
         self._mem_items: List[Tuple[int, int, Optional[bytes]]] = []
         self._mem_pos = 0
@@ -135,13 +144,22 @@ class MergingIterator:
         key = int(key)
         for cur in self._cursors:
             cur.seek(key)
-        if self._memtable is not None:
-            self._mem_items = self._memtable.scan(key)
-            self._mem_keys = np.fromiter((e[0] for e in self._mem_items),
-                                         KEY_DTYPE, len(self._mem_items))
+        if len(self._memtables) == 1:
+            self._mem_items = self._memtables[0].scan(key)
+        elif self._memtables:
+            # newest-memtable-wins dedup across the rotation queue: the
+            # first source holding a key owns it (sources are newest first)
+            combined = {}
+            for mt in self._memtables:
+                for k, s, v in mt.scan(key):
+                    if k not in combined:
+                        combined[k] = (s, v)
+            self._mem_items = [(k, s, v)
+                               for k, (s, v) in sorted(combined.items())]
         else:
             self._mem_items = []
-            self._mem_keys = np.zeros(0, dtype=KEY_DTYPE)
+        self._mem_keys = np.fromiter((e[0] for e in self._mem_items),
+                                     KEY_DTYPE, len(self._mem_items))
         self._mem_pos = 0
         self._demand = max(int(expected), _FIRST_DEMAND)
         self._exhausted = False

@@ -8,6 +8,7 @@ the last durable version and never observes a half-applied compaction.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .run import SortedRun
@@ -52,8 +53,14 @@ class RunStorage:
 
 
 class Manifest:
+    """Thread-safety: every method takes the manifest mutex, so version
+    installs (the async scheduler's worker), reader pin/unpin traffic, and
+    GC interleave atomically; a pinned :class:`Version` itself is immutable
+    and is read lock-free."""
+
     def __init__(self, storage: RunStorage):
         self.storage = storage
+        self._mu = threading.RLock()
         self._log: List[Version] = []
         self._pinned: Dict[int, Version] = {}  # long-lived reader snapshots
         self._pin_refs: Dict[int, int] = {}    # version_id -> reader refcount
@@ -65,23 +72,27 @@ class Manifest:
     # ------------------------------------------------------------- writes
     def commit(self, levels: Sequence[Sequence[SortedRun]], max_level: int,
                last_seq: int, stats: IOStats) -> Version:
-        lv = tuple(tuple(self.storage.add(r) for r in lvl) for lvl in levels)
-        v = Version(self._next_id, lv, max_level, last_seq)
-        self._next_id += 1
-        self._log.append(v)
-        return v
+        with self._mu:
+            lv = tuple(tuple(self.storage.add(r) for r in lvl)
+                       for lvl in levels)
+            v = Version(self._next_id, lv, max_level, last_seq)
+            self._next_id += 1
+            self._log.append(v)
+            return v
 
     def fsync(self, stats: IOStats):
-        self._synced_upto = len(self._log)
-        stats.wal_fsyncs += 1
-        # Old versions with no readers can be GC'd; keep the durable tail.
-        if len(self._log) > 8:
-            self._log = self._log[-8:]
+        with self._mu:
             self._synced_upto = len(self._log)
+            stats.wal_fsyncs += 1
+            # Old versions with no readers can be GC'd; keep the durable tail.
+            if len(self._log) > 8:
+                self._log = self._log[-8:]
+                self._synced_upto = len(self._log)
 
     # -------------------------------------------------------------- reads
     def current(self) -> Version:
-        return self._log[-1]
+        with self._mu:
+            return self._log[-1]
 
     def pin(self, v: Version) -> Version:
         """Pin a version for a long-lived reader: its runs survive GC even
@@ -92,40 +103,64 @@ class Manifest:
         long-lived readers can no longer leak a version by releasing a pin
         another reader still depends on.
         """
-        self._pinned[v.version_id] = v
-        self._pin_refs[v.version_id] = self._pin_refs.get(v.version_id, 0) + 1
-        return v
+        with self._mu:
+            self._pinned[v.version_id] = v
+            self._pin_refs[v.version_id] = \
+                self._pin_refs.get(v.version_id, 0) + 1
+            return v
+
+    def pin_current(self) -> Version:
+        """Atomically read-and-pin the newest version.
+
+        ``pin(current())`` from a reader thread races a concurrent
+        flush/compaction install: the version read could age out of the
+        durable tail (and lose its runs to GC) before the pin lands.  Taking
+        both steps under the manifest mutex closes the window; snapshots and
+        the scheduler's in-flight-compaction input retention both use this.
+        """
+        with self._mu:
+            return self.pin(self._log[-1])
 
     def unpin(self, version_id: int) -> bool:
         """Drop one reader reference; the version unpins at refcount zero.
 
         Returns True iff this release actually unpinned the version (callers
         skip GC work while other readers still hold it)."""
-        refs = self._pin_refs.get(version_id, 0) - 1
-        if refs > 0:
-            self._pin_refs[version_id] = refs
-            return False
-        self._pin_refs.pop(version_id, None)
-        return self._pinned.pop(version_id, None) is not None
+        with self._mu:
+            refs = self._pin_refs.get(version_id, 0) - 1
+            if refs > 0:
+                self._pin_refs[version_id] = refs
+                return False
+            self._pin_refs.pop(version_id, None)
+            return self._pinned.pop(version_id, None) is not None
 
     def pin_count(self, version_id: int) -> int:
-        return self._pin_refs.get(version_id, 0)
+        with self._mu:
+            return self._pin_refs.get(version_id, 0)
+
+    def total_pin_refs(self) -> int:
+        """Sum of all reader/compaction references (leak audit hook)."""
+        with self._mu:
+            return sum(self._pin_refs.values())
 
     def crash(self):
         """Lose versions past the fsync watermark (simulated crash)."""
-        self._pinned.clear()  # reader pins are process state, not durable
-        self._pin_refs.clear()
-        self._log = self._log[: max(self._synced_upto, 1)]
+        with self._mu:
+            self._pinned.clear()  # reader pins are process state, not durable
+            self._pin_refs.clear()
+            self._log = self._log[: max(self._synced_upto, 1)]
 
     def live_run_ids(self) -> List[int]:
-        ids: List[int] = []
-        for v in self._log:
-            for lvl in v.levels:
-                ids.extend(lvl)
-        for v in self._pinned.values():
-            for lvl in v.levels:
-                ids.extend(lvl)
-        return ids
+        with self._mu:
+            ids: List[int] = []
+            for v in self._log:
+                for lvl in v.levels:
+                    ids.extend(lvl)
+            for v in self._pinned.values():
+                for lvl in v.levels:
+                    ids.extend(lvl)
+            return ids
 
     def gc(self):
-        self.storage.gc(self.live_run_ids())
+        with self._mu:
+            self.storage.gc(self.live_run_ids())

@@ -138,11 +138,20 @@ class Memtable:
         self.capacity_bytes = capacity_bytes
         self.key_bytes = key_bytes
         self.block_size = block_size
+        self.frozen = False
         self._data: Dict[int, Tuple[int, Optional[bytes]]] = {}
         self._bytes = 0
 
+    def freeze(self) -> "Memtable":
+        """Mark immutable (async rotation): reads stay valid from any thread
+        because the dict is never touched again; writes become errors."""
+        self.frozen = True
+        return self
+
     def put(self, key: int, seq: int, value: Optional[bytes]):
         """value=None is a tombstone."""
+        if self.frozen:
+            raise RuntimeError("write to a frozen (rotated) memtable")
         prev = self._data.get(key)
         if prev is not None:
             self._bytes -= self.key_bytes + (len(prev[1]) if prev[1] is not None else 0)
@@ -163,6 +172,8 @@ class Memtable:
         engine passes its chunk-sizing cumsum; ignored when duplicates
         collapse entries).
         """
+        if self.frozen:
+            raise RuntimeError("write to a frozen (rotated) memtable")
         data = self._data
         kb = self.key_bytes
         n = len(keys)
@@ -183,8 +194,24 @@ class Memtable:
     def get(self, key: int) -> Optional[Tuple[int, Optional[bytes]]]:
         return self._data.get(key)
 
+    def snapshot_items(self, start_key: Optional[int] = None
+                       ) -> List[Tuple[int, int, Optional[bytes]]]:
+        """Lock-free point-in-time copy of (key, seq, value) triples.
+
+        A reader thread iterating the *active* memtable can race the single
+        writer ('dictionary changed size during iteration'); ``dict.copy``
+        is one C-level call that holds the GIL throughout (int keys, no
+        user ``__hash__``/``__eq__`` re-entry), so copying first gives a
+        consistent snapshot with no lock on the hot write path and no
+        retry.  ``start_key`` filters during the single extraction pass.
+        """
+        data = self._data.copy()
+        if start_key is None:
+            return [(k, s, v) for k, (s, v) in data.items()]
+        return [(k, s, v) for k, (s, v) in data.items() if k >= start_key]
+
     def scan(self, start_key: int) -> List[Tuple[int, int, Optional[bytes]]]:
-        items = [(k, s, v) for k, (s, v) in self._data.items() if k >= start_key]
+        items = self.snapshot_items(start_key)
         items.sort()
         return items
 
@@ -246,5 +273,25 @@ class Memtable:
         return run
 
     def clear(self):
+        if self.frozen:
+            raise RuntimeError("clear of a frozen (rotated) memtable")
         self._data.clear()
         self._bytes = 0
+
+
+class ImmutableMemtable:
+    """A frozen memtable queued for background flush, plus its WAL segment.
+
+    Rotation (async mode, DESIGN.md §11) freezes the active memtable and
+    hands it here together with the WAL that logged exactly its records; the
+    pair stays readable on every read path (between the active memtable and
+    L0, newest-first) until the background flush installs the run, and the
+    WAL segment — fully fsynced at rotation — is the durable twin replayed
+    by recovery if a crash beats the flush.
+    """
+
+    __slots__ = ("memtable", "wal")
+
+    def __init__(self, memtable: Memtable, wal: WriteAheadLog):
+        self.memtable = memtable.freeze()
+        self.wal = wal

@@ -27,6 +27,19 @@ class CompactionTask:
     dst_level: int
     include_dst: bool  # True => sort-merge with dst runs (leveled landing)
     reason: str
+    # Input freshness guard for decoupled generation/apply (async scheduler):
+    # the planner captures the source level's run ids at plan time; apply
+    # refuses a task whose inputs no longer match the tree (the scheduler
+    # then replans against current state).  None (the policies' own tasks)
+    # means "apply against whatever is there now" — the synchronous
+    # plan-then-apply loop never goes stale.
+    src_run_ids: Optional[Tuple[int, ...]] = None
+
+    def matches(self, src_runs: Sequence) -> bool:
+        """True iff the task's captured inputs are still the level's runs."""
+        if self.src_run_ids is None:
+            return True
+        return tuple(r.run_id for r in src_runs) == self.src_run_ids
 
 
 LevelSizes = Sequence[Sequence[int]]  # [level][run] -> bytes

@@ -73,6 +73,20 @@ class SortedRun:
     def max_key(self) -> int:
         return int(self.keys[-1]) if len(self) else 0
 
+    def bit_equal(self, other: "SortedRun") -> bool:
+        """Bit-for-bit payload equality: keys/seqs/vlens/vals/bloom bits.
+
+        The single definition of run equality used by every async-vs-sync
+        differential oracle (tests and the micro_dbbench inline assert), so
+        a future run field is added to the contract in exactly one place.
+        """
+        return bool(
+            np.array_equal(self.keys, other.keys)
+            and np.array_equal(self.seqs, other.seqs)
+            and np.array_equal(self.vlens, other.vlens)
+            and np.array_equal(self.vals, other.vals)
+            and np.array_equal(self.bloom.bits, other.bloom.bits))
+
     def block_bytes(self, block_id: int) -> int:
         """Physical bytes stored in one block (the last block may be short)."""
         if block_id < 0 or block_id >= self.n_blocks:
@@ -186,6 +200,26 @@ class SortedRun:
             return 0
         end_idx = min(end_idx, len(self))
         return int(self.block_of[end_idx - 1] - self.block_of[start_idx]) + 1
+
+
+def levels_bit_equal(levels_a: Sequence[Sequence[SortedRun]],
+                     levels_b: Sequence[Sequence[SortedRun]]) -> bool:
+    """Bit-for-bit tree equality: same level count, same runs per level,
+    every run pair :meth:`SortedRun.bit_equal`.
+
+    The one definition of the async-vs-sync differential oracle's tree
+    comparison, shared by the property tests and the micro_dbbench inline
+    assert so the contract cannot drift between them.
+    """
+    if len(levels_a) != len(levels_b):
+        return False
+    for la, lb in zip(levels_a, levels_b):
+        if len(la) != len(lb):
+            return False
+        for ra, rb in zip(la, lb):
+            if not ra.bit_equal(rb):
+                return False
+    return True
 
 
 # --------------------------------------------------------------------- build

@@ -49,6 +49,11 @@ class IOStats:
     compactions: int = 0
     delayed_last_level_compactions: int = 0  # paper §3.1 "Delayed ... Compaction"
     write_stalls: int = 0
+    write_slowdowns: int = 0      # soft write-pressure events (async scheduler)
+    stall_ns: int = 0             # foreground ns spent stalled/slowed on
+                                  # write pressure (async scheduler)
+    bg_flushes: int = 0           # memtable flushes applied by a worker thread
+    bg_compactions: int = 0       # compaction tasks applied by a worker thread
     wal_appends: int = 0
     wal_fsyncs: int = 0
 

@@ -155,7 +155,11 @@ class AutumnKVCache:
             bloom_allocation="monkey",
             # memory subsystem (DESIGN.md §9): hot page blocks served from
             # DRAM, L0 pinned so fresh inserts are always resident
-            cache_bytes=4 << 20, pin_l0_bytes=2 << 20))
+            cache_bytes=4 << 20, pin_l0_bytes=2 << 20,
+            # async scheduler (DESIGN.md §11): page-insert bursts after
+            # prefill return without paying flush/compaction; lookups read
+            # through the immutable-memtable window mid-churn
+            async_compaction=True))
         self.hits = 0
         self.misses = 0
         self.pages_written = 0
@@ -243,6 +247,15 @@ class AutumnKVCache:
                     levels=self.db.num_levels_in_use,
                     block_cache=self.db.cache_summary(),
                     io=dataclass_asdict(self.db.stats))
+
+    def close(self) -> None:
+        """Drain and stop the store's background compaction workers.
+
+        The cache keeps serving afterwards on the synchronous path; call
+        this when retiring an engine so each cache instance doesn't leave a
+        parked worker thread behind.
+        """
+        self.db.close()
 
 
 def dataclass_asdict(d) -> Dict[str, Any]:

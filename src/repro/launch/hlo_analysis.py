@@ -120,6 +120,41 @@ def _parse_instr_line(line: str):
     return name, shape_text, op, "".join(args)
 
 
+def _split_operands(args: str) -> List[Tuple[str, str]]:
+    """Split an operand list into (name, inline_shape) pairs.
+
+    Operands may be bare (``%p0``) or typed (``f32[32,256]{1,0} %p0`` —
+    newer HLO emitters print the shape inline), and shapes contain commas,
+    so the split must respect bracket/brace/paren nesting.  The inline
+    shape (empty string when absent) lets callers resolve operand shapes
+    even when the producing instruction lives in another computation.
+    """
+    parts: List[str] = []
+    depth, cur = 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    out: List[Tuple[str, str]] = []
+    for p in parts:
+        p = p.strip()
+        if not p:
+            continue
+        m = re.search(r"%?([\w\.\-]+)$", p)
+        if not m:
+            continue
+        out.append((m.group(1), p[: m.start()].strip()))
+    return out
+
+
 def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
     comps: Dict[str, Computation] = {}
     entry = ""
@@ -145,8 +180,15 @@ def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
         if parsed is None:
             continue
         name, shape_text, op, args = parsed
-        operands = [a.strip().lstrip("%") for a in args.split(",") if a.strip()]
+        pairs = _split_operands(args)
+        operands = [n for n, _ in pairs]
         cur.symbols[name] = shape_text
+        for n, inline_shape in pairs:
+            # typed operands carry their shape inline; record it so shape
+            # lookups work even when the producer wasn't parsed (or the
+            # emitter never declares it separately)
+            if inline_shape and n not in cur.symbols:
+                cur.symbols[n] = inline_shape
         # parameters declared as `%p = f32[..] parameter(0)` already recorded
         cur.instrs.append(Instr(name, shape_text, op, operands, line.strip()))
     return comps, entry

@@ -99,6 +99,11 @@ class ServeEngine:
         self.metrics["last_wave_s"] = time.time() - t0
         return [np.asarray(o[:r.gen_len]) for o, r in zip(outs, requests)]
 
+    def close(self) -> None:
+        """Retire the engine: drain the prefix cache's background workers."""
+        if self.kv is not None:
+            self.kv.close()
+
 
 def _slice_batch_row(cache: Pytree, i: int) -> Pytree:
     """Cache leaves are (layers, batch, ...); 'pos' is 0-dim."""

@@ -112,6 +112,47 @@ def test_put_batch_fsync_every_write_durability():
         assert db.get(k) == b"durable", k
 
 
+def test_write_batch_fsync_coalescing_counts():
+    """With wal_fsync_every_write=True a batch fsyncs once per *chunk*
+    (group commit), not once per record — asserted by counting actual WAL
+    fsync calls, not just the documented contract.
+
+    A single-chunk batch (big memtable) costs exactly one WAL fsync for
+    hundreds of records; the scalar twin pays one per record.  A multi-chunk
+    batch (small memtable) costs one per chunk plus the flush-path fsyncs.
+    """
+    ops = [(k, b"x" * 10) for k in range(500)]
+    # ---- single chunk: 500 records, exactly 1 WAL fsync ----
+    db = LSMStore(small_cfg(wal_fsync_every_write=True,
+                            memtable_bytes=1 << 20))
+    fsyncs = []
+    orig_fsync = db.wal.fsync
+    db.wal.fsync = lambda stats: (fsyncs.append(1), orig_fsync(stats))[1]
+    db.write_batch(ops)
+    assert len(fsyncs) == 1
+    # scalar twin: one fsync per record
+    db_s = LSMStore(small_cfg(wal_fsync_every_write=True,
+                              memtable_bytes=1 << 20))
+    s0 = db_s.stats.snapshot()
+    for k, v in ops:
+        db_s.put(k, v)
+    assert db_s.stats.delta(s0).wal_fsyncs == 500
+    # ---- multi chunk: one fsync per chunk + one per flush, nothing more ----
+    db_m = LSMStore(small_cfg(wal_fsync_every_write=True))  # 4 KiB memtable
+    chunks, fsyncs_m, flushes = [], [], []
+    orig_append = db_m.wal.append_batch_cols
+    orig_fsync_m = db_m.wal.fsync
+    orig_flush = db_m.flush
+    db_m.wal.append_batch_cols = \
+        lambda *a, **k: (chunks.append(1), orig_append(*a, **k))[1]
+    db_m.wal.fsync = lambda stats: (fsyncs_m.append(1), orig_fsync_m(stats))[1]
+    db_m.flush = lambda: (flushes.append(1), orig_flush())[1]
+    db_m.write_batch(ops)
+    assert len(chunks) > 1 and len(flushes) >= 1
+    assert len(chunks) < len(ops), "chunking degenerated to per-record"
+    assert len(fsyncs_m) == len(chunks) + len(flushes)
+
+
 def test_torn_batch_tail_recovery():
     """A partially synced batch recovers exactly the records that fit the
     fsync watermark; the torn record and everything after are lost."""
