@@ -6,7 +6,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import LSMConfig, LSMStore
+from repro.core import LSMConfig, LSMStore, make_store, uniform_splitters
 
 # Scaled for the 1-core container; pass --full for paper-scale runs.
 DEFAULT_N = 200_000
@@ -18,12 +18,21 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             cache_kb: int = 0, pin_l0_kb: int = 0,
             cache_policy: str = "clock",
             async_compaction: bool = False,
-            compaction_workers: int = 1) -> LSMStore:
+            compaction_workers: int = 1,
+            shards: int = 1,
+            shard_key_space: Optional[int] = None) -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
     container-scale datasets so the tree reaches realistic depths (L=4..9).
     ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9);
-    ``async_compaction`` the background scheduler (DESIGN.md §11)."""
-    return LSMStore(LSMConfig(
+    ``async_compaction`` the background scheduler (DESIGN.md §11);
+    ``shards`` the range-partitioned facade (DESIGN.md §12) — pass
+    ``shard_key_space`` for dense key ranges (micro_dbbench's ``[0, 8n)``
+    streams) so the splitters balance; hashed keys (ycsb's scrambled keys)
+    balance under the default full-uint64 splitters."""
+    splitters = None
+    if shards > 1 and shard_key_space is not None:
+        splitters = uniform_splitters(shards, shard_key_space)
+    return make_store(LSMConfig(
         policy=policy, c=c, T=T,
         memtable_bytes=memtable_kb << 10,
         base_level_bytes=base_kb << 10,
@@ -33,7 +42,22 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
         pin_l0_bytes=pin_l0_kb << 10,
         cache_policy=cache_policy,
         async_compaction=async_compaction,
-        compaction_workers=compaction_workers))
+        compaction_workers=compaction_workers,
+        shards=shards,
+        shard_splitters=splitters))
+
+
+def tune_bulk_load(db, n: int, value_size: int) -> None:
+    """RocksDB-documented offline-ingest pressure settings, applied
+    identically to the async and sharded load lanes (so their speedup
+    columns compare scheduling, not trigger drift): soft pressure off,
+    hard stall sized to the whole burst.  On a sharded facade the config
+    is live-shared with every shard, and the burst is sized per shard
+    (each shard sees ~1/N of the rotations)."""
+    shards = len(db.shards) if hasattr(db, "shards") else 1
+    db.config.slowdown_trigger = 0
+    rotations = n * (value_size + 16) // (shards * db.config.memtable_bytes)
+    db.config.stall_trigger = max(256, rotations + 64)
 
 
 def cache_hit_pct(delta) -> float:

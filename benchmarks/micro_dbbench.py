@@ -33,6 +33,15 @@ lost to write-pressure stalls (``IOStats.stall_ns``).  After
 ``wait_for_quiesce`` the async tree is asserted bit-for-bit equal to the
 synchronous one — the scheduler's determinism contract.
 
+Sharded lane (DESIGN.md §12): the same stream once more through a
+``shards=SHARD_N`` ``ShardedLSMStore`` (range splitters over the key space,
+parallel per-shard schedulers under the SAME ``BG_WORKERS`` budget as the
+async lane — both lanes pin ``compaction_workers`` explicitly so
+``shard_speedup`` measures sharding, not worker drift).
+``load_shard{N}_kops`` is end-to-end (quiesced) throughput and
+``shard_speedup`` its gain over the shards=1 async lane's end-to-end wall
+clock; reads are asserted byte-identical to the single-store oracle.
+
 ``--smoke`` runs a seconds-scale configuration exercising every column and
 asserts the write-subsystem columns are present and nonzero (CI uses it to
 keep the benchmark code paths green on every PR).
@@ -43,14 +52,40 @@ import argparse
 import time
 from typing import Dict, List
 
+import numpy as np
+
 from .common import (DEFAULT_N, cache_hit_pct, fill_random, fill_random_batch,
                      fill_random_batch_async, fill_seq, make_db,
-                     multiget_random, read_random, scan_random, seek_random)
+                     multiget_random, read_random, scan_random, seek_random,
+                     tune_bulk_load)
 
 VALUE_SIZES = (50, 100, 200)   # Zippy/UP2X, UDB/VAR, APP/ETC (paper §4.2.1)
 SCAN_LEN = 100                 # entries per iterator scan (db_bench seek+next)
 CACHE_KB = 2048                # block-cache budget for the cached lane
 PIN_L0_KB = 256                # DRAM-resident L0 budget
+def _cores() -> int:
+    import os
+    try:
+        return len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        return os.cpu_count() or 1
+
+
+# Shards in the sharded-facade lane (§12): matched to the cores actually
+# available, capped at 4.  The scaling law measured on this engine: wall
+# clock improves while shards <= cores (parallel drains + shallower trees);
+# oversubscribing (4 shards on a 2-core container) lands at parity — the
+# extra always-draining pipelines take GIL slices from the writer and
+# fragment merges below the size where numpy amortizes.  On a >=4-core box
+# this is the issue's 4-way lane.
+SHARD_N = max(2, min(4, _cores()))
+BG_WORKERS = 4                 # background worker budget, pinned EXPLICITLY
+                               # in BOTH the async (shards=1) and sharded
+                               # lanes so shard_speedup measures sharding,
+                               # not worker-count drift between rows (the
+                               # shards=1 turnstile can't use extras anyway;
+                               # the facade needs budget >= shards or the
+                               # pipelines convoy — see DESIGN.md §12)
 
 
 def assert_trees_equal(db_a, db_b) -> None:
@@ -59,6 +94,20 @@ def assert_trees_equal(db_a, db_b) -> None:
     from repro.core.run import levels_bit_equal
 
     assert levels_bit_equal(db_a._levels, db_b._levels), "async tree diverged"
+
+
+def assert_sharded_reads_equal(db_shard, db_oracle, n: int) -> None:
+    """Cross-shard differential check (§12): a sharded store's reads must
+    be byte-identical to the single-store oracle's — the full-range scan
+    (shard-ordered concatenation vs merged iterator) and a multi_get wave
+    across the whole key space."""
+    assert db_shard.total_live_entries() == db_oracle.total_live_entries(), \
+        "sharded live-entry count diverged"
+    assert db_shard.scan(0, n + 1) == db_oracle.scan(0, n + 1), \
+        "sharded scan diverged from single-store oracle"
+    keys = np.random.default_rng(9).integers(0, n * 8, 4096, np.uint64)
+    assert db_shard.multi_get(keys) == db_oracle.multi_get(keys), \
+        "sharded multi_get diverged from single-store oracle"
 
 
 def compact_bench(db) -> Dict[str, float]:
@@ -128,26 +177,56 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
                 del db_batch2
             # ---- async-scheduler lane: same stream, background pipeline ----
             # best-of-3 fresh stores (this container's wall clock is noisy,
-            # and min() is the standard estimator — same as compact_bench)
+            # and min() is the standard estimator — same as compact_bench).
+            # compaction_workers is pinned to BG_WORKERS, the same budget
+            # the sharded lane gets (honesty: shard_speedup must measure
+            # sharding, not worker-count drift between rows).
+            # The sharded lane (§12) rides in the same loop: SHARD_N
+            # range-partitioned stores draining flush/compaction on parallel
+            # per-shard schedulers under the same BG_WORKERS budget.
+            # shard_speedup is total-wall-clock vs total-wall-clock against
+            # the shards=1 async lane: the honest number — sharding wins by
+            # running background work in parallel AND by making each
+            # shard's tree shallower (less total compaction), not by
+            # deferring work.  The two lanes run back-to-back inside each
+            # repetition (paired measurement): this container's load drifts
+            # on the minutes scale, so shard_speedup is the MEDIAN of the
+            # per-rep total/total ratios — each ratio's numerator and
+            # denominator share one drift window, and the median discards
+            # spike reps (independent mins could pair a quiet async rep
+            # with a noisy sharded one, or vice versa).
             t_fillasync_fg = t_fillasync_total = float("inf")
+            t_shard_total = float("inf")
+            pair_ratios = []
             stall_pct = 0.0
-            for _ in range(3):
-                db_async = make_db(c=c, async_compaction=True)
+            for _ in range(5):   # 5 paired reps: the noise spikes on this
+                                 # container last whole seconds; a true
+                                 # median of 5 ratios tolerates two spiked
+                                 # pairs
+                db_async = make_db(c=c, async_compaction=True,
+                                   compaction_workers=BG_WORKERS)
                 # bulk-load tuning, as RocksDB documents for offline
-                # ingest: soft pressure off, hard stall sized to the whole
-                # burst (the steady-state defaults are for mixed
-                # read/write traffic where deep immutable backlogs would
-                # tax every read)
-                db_async.config.slowdown_trigger = 0
-                rotations = n * (vs + 16) // db_async.config.memtable_bytes
-                db_async.config.stall_trigger = max(256, rotations + 64)
+                # ingest (shared with the sharded lane): soft pressure off,
+                # hard stall sized to the whole burst
+                tune_bulk_load(db_async, n, vs)
                 fg, total = fill_random_batch_async(db_async, n, vs)
                 assert_trees_equal(db_batch, db_async)
+                t_async_total = total
                 if fg < t_fillasync_fg:
                     t_fillasync_fg, t_fillasync_total = fg, total
                     stall_pct = (100.0 * db_async.stats.stall_ns
                                  / max(fg * n * 1e3, 1.0))
                 db_async.close()
+                db_shard = make_db(c=c, async_compaction=True,
+                                   compaction_workers=BG_WORKERS,
+                                   shards=SHARD_N, shard_key_space=n * 8)
+                tune_bulk_load(db_shard, n, vs)
+                _, total = fill_random_batch_async(db_shard, n, vs)
+                assert_sharded_reads_equal(db_shard, db_batch, n)
+                t_shard_total = min(t_shard_total, total)
+                if total:
+                    pair_ratios.append(t_async_total / total)
+                db_shard.close()
             compact = compact_bench(db)
             key_space = n * 8
             s0 = db.stats.snapshot()
@@ -185,6 +264,14 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
                                     if t_fillasync_fg else 0.0),
                 load_async_total_us=t_fillasync_total,
                 stall_pct=stall_pct,
+                # load_shard{N}_kops: end-to-end (quiesced) load throughput
+                # of the SHARD_N-way facade (best rep); shard_speedup:
+                # median per-rep paired ratio vs the shards=1 async lane's
+                # end-to-end wall clock, same worker budget
+                **{f"load_shard{SHARD_N}_kops":
+                   (1e3 / t_shard_total if t_shard_total else 0.0)},
+                shard_speedup=(float(np.median(pair_ratios))
+                               if pair_ratios else 0.0),
                 compact_mb_s=compact["compact_mb_s"],
                 compact_speedup=compact["compact_speedup"],
                 readrandom_us=t_read, seekrandom_us=t_seek,
@@ -212,6 +299,7 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
     hdr = ("system,value_size,levels,fillseq_us,fillrandom_us,"
            "load_batch_kops,load_batch_speedup,load_async_kops,"
            "load_async_speedup,stall_pct,"
+           f"load_shard{SHARD_N}_kops,shard_speedup,"
            "compact_mb_s,compact_speedup,"
            "readrandom_us,"
            "seekrandom_us,seeknext10_us,seeknext100_us,multiget_us,"
@@ -225,6 +313,8 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
               f"{r['load_batch_kops']:.1f},{r['load_batch_speedup']:.1f},"
               f"{r['load_async_kops']:.1f},{r['load_async_speedup']:.1f},"
               f"{r['stall_pct']:.1f},"
+              f"{r[f'load_shard{SHARD_N}_kops']:.1f},"
+              f"{r['shard_speedup']:.2f},"
               f"{r['compact_mb_s']:.1f},{r['compact_speedup']:.1f},"
               f"{r['readrandom_us']:.2f},{r['seekrandom_us']:.2f},"
               f"{r['seeknext10_us']:.2f},{r['seeknext100_us']:.2f},"
@@ -244,17 +334,27 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
             # by run(); here the columns must exist and be sane)
             assert r["load_async_kops"] > 0 and r["load_async_speedup"] > 0, r
             assert r["stall_pct"] >= 0, r
+            # sharded lane (§12): bit-for-bit reads vs the single-store
+            # oracle are asserted inline by run(); the columns must exist
+            # and be sane here
+            assert r[f"load_shard{SHARD_N}_kops"] > 0, r
+            assert r["shard_speedup"] > 0, r
         print(f"smoke-ok: load_batch {rows[0]['load_batch_speedup']:.1f}x, "
               f"load_async {rows[0]['load_async_speedup']:.1f}x "
               f"(stall {rows[0]['stall_pct']:.1f}%), "
+              f"shard{SHARD_N} {rows[0]['shard_speedup']:.2f}x, "
               f"compaction {rows[0]['compact_speedup']:.1f}x")
     if json_path:
         import json
+
+        def _geomean(vals):
+            g = 1.0
+            for s in vals:
+                g *= s
+            return g ** (1.0 / len(vals))
+
         speedups = [r["load_async_speedup"] for r in rows]
-        geomean = 1.0
-        for s in speedups:
-            geomean *= s
-        geomean **= 1.0 / len(speedups)
+        shard_speedups = [r["shard_speedup"] for r in rows]
         summary = dict(
             n=n,
             load_scalar_us=rows[0]["fillrandom_us"],
@@ -262,8 +362,14 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
                            if rows[0]["load_batch_kops"] else 0.0),
             load_async_speedup_min=min(speedups),
             load_async_speedup_max=max(speedups),
-            load_async_speedup_geomean=geomean,
+            load_async_speedup_geomean=_geomean(speedups),
             stall_pct_max=max(r["stall_pct"] for r in rows),
+            shards=SHARD_N,
+            cores=_cores(),
+            bg_workers=BG_WORKERS,
+            shard_speedup_min=min(shard_speedups),
+            shard_speedup_max=max(shard_speedups),
+            shard_speedup_geomean=_geomean(shard_speedups),
         )
         with open(json_path, "w") as f:
             json.dump(dict(bench="micro_dbbench", summary=summary,

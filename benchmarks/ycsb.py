@@ -17,6 +17,11 @@ The ``autumn(.8)+async`` row runs the whole sweep with the background
 compaction scheduler (DESIGN.md §11): the load phase reports the
 *foreground* ingest rate (flush/compaction drain on a worker thread) and
 every mixed workload exercises reads racing live background installs.
+
+The ``autumn(.8)+sharded`` row runs the sweep on a 4-shard
+``ShardedLSMStore`` (DESIGN.md §12): the scrambled keys range-partition
+uniformly, background work drains on parallel per-shard schedulers, and
+every workload exercises the facade's cross-shard read paths.
 """
 from __future__ import annotations
 
@@ -120,24 +125,29 @@ WORKLOADS = {
 }
 
 
-SYSTEMS = (  # (name, c, cache_kb, pin_l0_kb, async_compaction)
-    ("rocksdb", 1.0, 0, 0, False),
-    ("autumn(.8)", 0.8, 0, 0, False),
-    ("autumn(.4)", 0.4, 0, 0, False),
-    ("autumn(.8)+cache", 0.8, 1024, 128, False),
+SYSTEMS = (  # (name, c, cache_kb, pin_l0_kb, async_compaction, shards)
+    ("rocksdb", 1.0, 0, 0, False, 1),
+    ("autumn(.8)", 0.8, 0, 0, False, 1),
+    ("autumn(.4)", 0.4, 0, 0, False, 1),
+    ("autumn(.8)+cache", 0.8, 1024, 128, False, 1),
     # background flush/compaction (DESIGN.md §11) at the steady-state
     # pressure defaults: load_kops is the *foreground* ingest rate, the
     # workload mixes then run with reads racing live background churn
-    ("autumn(.8)+async", 0.8, 0, 0, True),
+    ("autumn(.8)+async", 0.8, 0, 0, True, 1),
+    # sharded keyspace (DESIGN.md §12): 4 range-partitioned stores, parallel
+    # per-shard schedulers under a 4-worker budget; the scrambled YCSB keys
+    # are uniform over uint64, so the default splitters balance
+    ("autumn(.8)+sharded", 0.8, 0, 0, True, 4),
 )
 
 
 def run(n: int = 60_000, n_ops: int = 8_000) -> List[Dict]:
     rows = []
-    for name, c, cache_kb, pin_l0_kb, async_c in SYSTEMS:
+    for name, c, cache_kb, pin_l0_kb, async_c, shards in SYSTEMS:
         db = make_db(c=c, T=5.0, bits_per_key=10, bloom_allocation="monkey",
                      cache_kb=cache_kb, pin_l0_kb=pin_l0_kb,
-                     async_compaction=async_c)
+                     async_compaction=async_c, shards=shards,
+                     compaction_workers=shards)
         load = _load(db, n)
         # levels/space_amp need the settled tree; stalls are re-read after
         # quiesce so the async row's count is deterministic (the background

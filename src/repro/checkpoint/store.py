@@ -33,7 +33,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import LSMConfig, LSMStore
+from repro.core import LSMConfig, make_store
 
 Pytree = Any
 
@@ -49,7 +49,9 @@ def _leaf_paths(tree: Pytree) -> List[Tuple[str, Any]]:
 
 class CheckpointStore:
     def __init__(self, lsm_config: Optional[LSMConfig] = None):
-        self.db = LSMStore(lsm_config or LSMConfig(
+        # make_store: a shard-aware config (LSMConfig.shards > 1) transparently
+        # range-partitions the chunk-id keyspace behind the same API
+        self.db = make_store(lsm_config or LSMConfig(
             policy="garnering", T=2.0, c=0.8,
             memtable_bytes=1 << 20, base_level_bytes=4 << 20,
             bits_per_key=10, bloom_allocation="monkey"))
@@ -92,7 +94,7 @@ class CheckpointStore:
         self.db.put(int(_MANIFEST_KEY_BASE) + step,
                     json.dumps(manifest).encode())
         self.db.flush()
-        self.db.wal.fsync(self.db.stats)
+        self.db.fsync_wal()
         return manifest
 
     # --------------------------------------------------------------- restore

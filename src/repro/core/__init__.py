@@ -11,7 +11,7 @@ Public API:
 from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
                     garnering_theoretical_fprs, theoretical_fpr,
                     zero_result_read_cost)
-from .cache import BlockCache, PinnedLevelManager
+from .cache import BlockCache, BlockCacheView, PinnedLevelManager
 from .engine import LSMConfig, LSMStore
 from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
@@ -20,10 +20,14 @@ from .policy import (POLICIES, CompactionTask, Garnering, LazyLeveling,
                      Leveling, MergePolicy, QLSMBush, Tiering, make_policy)
 from .run import SortedRun, build_run, merge_runs, merge_runs_scalar
 from .scheduler import CompactionScheduler
+from .sharded import (ShardedLSMStore, ShardedSnapshot, make_store,
+                      uniform_splitters)
 from .types import BLOCK_SIZE, KEY_BYTES, IOStats
 
 __all__ = [
-    "LSMStore", "LSMConfig", "IOStats", "BlockCache", "PinnedLevelManager",
+    "LSMStore", "LSMConfig", "IOStats", "BlockCache", "BlockCacheView",
+    "PinnedLevelManager",
+    "ShardedLSMStore", "ShardedSnapshot", "make_store", "uniform_splitters",
     "BloomFilter", "allocate_fprs",
     "bits_for_fpr", "theoretical_fpr", "garnering_theoretical_fprs",
     "zero_result_read_cost", "MergingIterator", "Manifest", "RunStorage",

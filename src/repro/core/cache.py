@@ -43,7 +43,17 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .types import IOStats
 
-CacheKey = Tuple[int, int]  # (run_id, block_id)
+# (run_id, block_id).  In sharded use the run-id slot is a *namespaced*
+# composite ``(shard_id, raw_run_id)`` tuple minted by BlockCacheView, so two
+# shards can never alias each other's blocks and namespace-scoped
+# retain/set_pinned/clear can select a shard's entries by key alone.
+CacheKey = Tuple[int, int]
+
+
+def _ns_of(key: CacheKey):
+    """Namespace of a cache key: ``None`` for plain (unsharded) run ids."""
+    rid = key[0]
+    return rid[0] if isinstance(rid, tuple) else None
 
 
 class BlockCache:
@@ -69,6 +79,14 @@ class BlockCache:
         self._pinned: Dict[CacheKey, int] = {}  # key -> nbytes (L0 residency)
         self._bytes = 0          # charged bytes, evictable entries only
         self._pinned_bytes = 0   # charged bytes, pinned entries
+        # Sharded use (DESIGN.md §12): per-namespace charged-byte budgets.
+        # With no budgets registered the cache behaves exactly as before
+        # (one global budget, one eviction domain).  ``_ns_keys`` mirrors
+        # ``_entries``'s order per namespace so namespace-scoped eviction
+        # stays O(1) amortized instead of rescanning the shared dict.
+        self._ns_budget: Dict = {}
+        self._ns_bytes: Dict = {}
+        self._ns_keys: Dict = {}   # ns -> OrderedDict[key, None], hand order
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -182,18 +200,44 @@ class BlockCache:
     # -------------------------------------------------------------- admission
     def _admit(self, key: CacheKey, nbytes: int) -> None:
         nbytes = int(nbytes)
-        if nbytes <= 0 or nbytes > self.capacity_bytes:
+        ns = _ns_of(key) if self._ns_budget else None
+        budget = self._ns_budget.get(ns, self.capacity_bytes)
+        if nbytes <= 0 or nbytes > budget:
             return  # uncacheable (oversized block, or cache disabled)
+        if ns is not None:
+            # Namespace budget first: one shard's pressure evicts only its
+            # own cold entries, never a sibling's working set.
+            while (self._ns_bytes.get(ns, 0) + nbytes > budget
+                   and self._evict_one_ns(ns)):
+                pass
+            if self._ns_bytes.get(ns, 0) + nbytes > budget:
+                return  # nothing evictable left in this namespace
+        # Global backstop (the only loop in unsharded use, where it is the
+        # exact pre-namespace behavior).
         while self._bytes + nbytes > self.capacity_bytes and self._entries:
             self._evict_one()
         self._entries[key] = [nbytes, 0]
         self._bytes += nbytes
+        if ns is not None:
+            self._ns_bytes[ns] = self._ns_bytes.get(ns, 0) + nbytes
+            self._ns_keys.setdefault(ns, OrderedDict())[key] = None
+
+    def _drop_entry(self, key: CacheKey) -> None:
+        nb = self._entries.pop(key)[0]
+        self._bytes -= nb
+        ns = _ns_of(key)
+        if ns is not None:
+            if ns in self._ns_bytes:
+                self._ns_bytes[ns] -= nb
+            nsk = self._ns_keys.get(ns)
+            if nsk is not None:
+                nsk.pop(key, None)
+        self.evictions += 1
 
     def _evict_one(self) -> None:
         if self.policy == "lru":
-            _, (nb, _) = self._entries.popitem(last=False)
-            self._bytes -= nb
-            self.evictions += 1
+            key = next(iter(self._entries))
+            self._drop_entry(key)
             return
         # CLOCK: sweep from the hand, granting second chances to hot entries.
         while True:
@@ -202,10 +246,38 @@ class BlockCache:
                 e[1] = 0
                 self._entries.move_to_end(key)
             else:
-                del self._entries[key]
-                self._bytes -= e[0]
-                self.evictions += 1
+                self._drop_entry(key)
                 return
+
+    def _evict_one_ns(self, ns) -> bool:
+        """Evict one cold entry belonging to ``ns`` (same policy semantics,
+        eviction domain scoped to the namespace; other namespaces' entries
+        are never touched or reordered).  Walks the namespace's own ordered
+        index (``_ns_keys``), so the cost is O(1) amortized — one shard's
+        churn never rescans the siblings' entries under the shared mutex.
+        Returns False when the namespace holds nothing evictable."""
+        nsk = self._ns_keys.get(ns)
+        if not nsk:
+            return False
+        if self.policy == "lru":
+            self._drop_entry(next(iter(nsk)))
+            return True
+        # CLOCK within the namespace: grant second chances in hand order;
+        # each hot entry is cleared and moved to the back of BOTH orders,
+        # so if every entry was hot the hand wraps to the (now cold)
+        # oldest entry and evicts it — one full sweep, amortized O(1).
+        for _ in range(len(nsk)):
+            key = next(iter(nsk))
+            e = self._entries[key]
+            if e[1]:
+                e[1] = 0
+                self._entries.move_to_end(key)
+                nsk.move_to_end(key)
+            else:
+                self._drop_entry(key)
+                return True
+        self._drop_entry(next(iter(nsk)))
+        return True
 
     # ------------------------------------------------------------- pin control
     def set_pinned(self, blocks: Dict[CacheKey, int]) -> None:
@@ -219,9 +291,48 @@ class BlockCache:
             self._pinned = dict(blocks)
             self._pinned_bytes = sum(self._pinned.values())
             for key in self._pinned:
-                e = self._entries.pop(key, None)
-                if e is not None:
-                    self._bytes -= e[0]
+                self._unadmit(key)
+
+    def _unadmit(self, key: CacheKey) -> None:
+        """Remove an evictable entry (not an eviction: no counter charge)."""
+        e = self._entries.pop(key, None)
+        if e is not None:
+            self._bytes -= e[0]
+            ns = _ns_of(key)
+            if ns is not None:
+                if ns in self._ns_bytes:
+                    self._ns_bytes[ns] -= e[0]
+                nsk = self._ns_keys.get(ns)
+                if nsk is not None:
+                    nsk.pop(key, None)
+
+    # ------------------------------------------------------------- namespaces
+    def set_ns_budget(self, ns, budget_bytes: int) -> None:
+        """Register a per-namespace charged-byte budget (sharded use: one
+        namespace per shard, budgets summing to ``capacity_bytes``)."""
+        self._ns_budget[ns] = int(budget_bytes)
+
+    def ns_charged_bytes(self, ns) -> int:
+        with self._mu:
+            return self._ns_bytes.get(ns, 0)
+
+    def ns_pinned_bytes(self, ns) -> int:
+        with self._mu:
+            return sum(nb for k, nb in self._pinned.items()
+                       if _ns_of(k) == ns)
+
+    def set_pinned_ns(self, ns, blocks: Dict[CacheKey, int]) -> None:
+        """Namespace-scoped :meth:`set_pinned`: replace only the pinned set
+        belonging to ``ns``; other namespaces' pinned blocks are untouched
+        (a shard's L0 repin must never wipe a sibling's resident L0)."""
+        with self._mu:
+            kept = {k: nb for k, nb in self._pinned.items()
+                    if _ns_of(k) != ns}
+            kept.update(blocks)
+            self._pinned = kept
+            self._pinned_bytes = sum(kept.values())
+            for key in blocks:
+                self._unadmit(key)
 
     # ------------------------------------------------------------ invalidation
     def retain(self, live_run_ids: Iterable[int]) -> None:
@@ -230,10 +341,39 @@ class BlockCache:
             live = set(live_run_ids)
             dead = [k for k in self._entries if k[0] not in live]
             for k in dead:
-                self._bytes -= self._entries.pop(k)[0]
+                self._unadmit(k)
             dead_p = [k for k in self._pinned if k[0] not in live]
             for k in dead_p:
                 self._pinned_bytes -= self._pinned.pop(k)
+
+    def retain_ns(self, ns, live_raw_ids: Iterable[int]) -> None:
+        """Namespace-scoped :meth:`retain`: drop dead runs of ``ns`` only.
+
+        The satellite fix for the sharded facade: a shard invalidating
+        after its manifest commit knows only its *own* live run ids, so an
+        unscoped ``retain`` would evict (never alias — keys are namespaced)
+        every sibling shard's live blocks.
+        """
+        with self._mu:
+            live = set(live_raw_ids)
+            dead = [k for k in self._ns_keys.get(ns, ())
+                    if k[0][1] not in live]
+            for k in dead:
+                self._unadmit(k)
+            dead_p = [k for k in self._pinned
+                      if _ns_of(k) == ns and k[0][1] not in live]
+            for k in dead_p:
+                self._pinned_bytes -= self._pinned.pop(k)
+
+    def clear_ns(self, ns) -> None:
+        """Drop one namespace's entries + pins (a shard's crash/recover)."""
+        with self._mu:
+            for k in list(self._ns_keys.get(ns, ())):
+                self._unadmit(k)
+            for k in [k for k in self._pinned if _ns_of(k) == ns]:
+                self._pinned_bytes -= self._pinned.pop(k)
+            self._ns_bytes.pop(ns, None)
+            self._ns_keys.pop(ns, None)
 
     def clear(self) -> None:
         """Drop everything (process restart: DRAM contents are volatile)."""
@@ -242,6 +382,95 @@ class BlockCache:
             self._pinned.clear()
             self._bytes = 0
             self._pinned_bytes = 0
+            self._ns_bytes.clear()
+            self._ns_keys.clear()
+
+
+class BlockCacheView:
+    """A shard's namespaced, budget-scoped lens over a shared BlockCache.
+
+    Presents the exact cache protocol ``LSMStore``/``PinnedLevelManager``
+    speak (``read_block``/``read_blocks``/``read_block_span``/``retain``/
+    ``set_pinned``/``clear``/``__contains__``), with every key namespaced as
+    ``((namespace, run_id), block_id)`` — so N shards share one budgeted
+    cache (admissions beyond the view's ``budget_bytes`` evict only this
+    namespace's cold entries) and one shard's invalidation/repin/clear can
+    never touch a sibling's blocks.  Hit/miss/eviction counters are shared
+    (one cache, one hit rate); ``charged_bytes``/``pinned_bytes`` report the
+    namespace's slice.
+    """
+
+    def __init__(self, cache: BlockCache, namespace, budget_bytes: int):
+        self.cache = cache
+        self.namespace = namespace
+        self.budget_bytes = int(budget_bytes)
+        cache.set_ns_budget(namespace, budget_bytes)
+
+    # ---------------------------------------------------- cache protocol
+    def read_block(self, run_id, block_id: int, nbytes: int,
+                   stats: IOStats) -> bool:
+        return self.cache.read_block((self.namespace, run_id), block_id,
+                                     nbytes, stats)
+
+    def read_blocks(self, run_id, block_ids, block_bytes,
+                    stats: IOStats) -> int:
+        return self.cache.read_blocks((self.namespace, run_id), block_ids,
+                                      block_bytes, stats)
+
+    def read_block_span(self, run_id, first_block: int, last_block: int,
+                        block_bytes, stats: IOStats) -> int:
+        return self.cache.read_block_span((self.namespace, run_id),
+                                          first_block, last_block,
+                                          block_bytes, stats)
+
+    def retain(self, live_run_ids: Iterable[int]) -> None:
+        self.cache.retain_ns(self.namespace, live_run_ids)
+
+    def set_pinned(self, blocks: Dict[CacheKey, int]) -> None:
+        self.cache.set_pinned_ns(
+            self.namespace,
+            {((self.namespace, rid), bid): nb
+             for (rid, bid), nb in blocks.items()})
+
+    def clear(self) -> None:
+        self.cache.clear_ns(self.namespace)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        return ((self.namespace, key[0]), key[1]) in self.cache
+
+    # ------------------------------------------------- shared accounting
+    # PinnedLevelManager counts residency misses under the cache mutex and
+    # bumps the shared miss counter; cache_summary reads the rest.
+    @property
+    def _mu(self):
+        return self.cache._mu
+
+    @property
+    def hits(self) -> int:
+        return self.cache.hits
+
+    @property
+    def misses(self) -> int:
+        return self.cache.misses
+
+    @misses.setter
+    def misses(self, v: int) -> None:
+        self.cache.misses = v
+
+    @property
+    def evictions(self) -> int:
+        return self.cache.evictions
+
+    def hit_rate(self) -> float:
+        return self.cache.hit_rate()
+
+    @property
+    def charged_bytes(self) -> int:
+        return self.cache.ns_charged_bytes(self.namespace)
+
+    @property
+    def pinned_bytes(self) -> int:
+        return self.cache.ns_pinned_bytes(self.namespace)
 
 
 class PinnedLevelManager:

@@ -89,10 +89,31 @@ class LSMConfig:
                                         # trigger or the workers go idle
                                         # (hard pressure, ~8 MiB memory
                                         # backstop); <=0 disables
+    shards: int = 1                     # >1: `make_store` builds a
+                                        # ShardedLSMStore — N independent
+                                        # range-partitioned LSMStores behind
+                                        # one facade with parallel per-shard
+                                        # schedulers and a shared budgeted
+                                        # BlockCache (DESIGN.md §12).  Plain
+                                        # LSMStore ignores this field.
+    shard_splitters: Optional[Tuple[int, ...]] = None
+                                        # order-preserving range splitters
+                                        # (shards-1 ascending uint64 bounds;
+                                        # key k lives in the first shard
+                                        # with k < splitter).  None =>
+                                        # uniform split of the full uint64
+                                        # space (right for hashed keys —
+                                        # kvcache/checkpoint; pass explicit
+                                        # splitters for dense key ranges)
 
 
 class LSMStore:
-    def __init__(self, config: Optional[LSMConfig] = None):
+    def __init__(self, config: Optional[LSMConfig] = None, *,
+                 scheduler_budget=None, scheduler_offset: int = 0):
+        # scheduler_budget / scheduler_offset: sharded-facade wiring (a
+        # shared worker-budget semaphore and a core-spreading offset handed
+        # to this store's CompactionScheduler, DESIGN.md §12).  Plain
+        # single-store use leaves both at their defaults.
         self.config = config or LSMConfig()
         self.policy: MergePolicy = make_policy(
             self.config.policy, T=self.config.T, c=self.config.c,
@@ -119,7 +140,8 @@ class LSMStore:
         self._scheduler: Optional[CompactionScheduler] = None
         if self.config.async_compaction:
             self._scheduler = CompactionScheduler(
-                self, self.config.compaction_workers)
+                self, self.config.compaction_workers,
+                budget=scheduler_budget, worker_offset=scheduler_offset)
         self.block_cache: Optional[BlockCache] = None
         self.pinned_l0: Optional[PinnedLevelManager] = None
         if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
@@ -148,6 +170,22 @@ class LSMStore:
         self.block_cache = BlockCache(cache_bytes, policy)
         self.pinned_l0 = PinnedLevelManager(self.block_cache, pin_l0_bytes)
         # attaching mid-life: resident L0 blocks must be loaded (charged)
+        with self._maint_lock:
+            self.pinned_l0.repin(self._levels[0], stats=self.stats)
+
+    def attach_cache(self, cache, pin_l0_bytes: int = 0) -> None:
+        """Attach an externally owned cache object (the sharded facade's
+        namespaced ``BlockCacheView`` of the shared ``BlockCache``,
+        DESIGN.md §12) instead of building a private one.
+
+        The object must speak the BlockCache read/retain/pin protocol;
+        every read path and the commit-time invalidation triplet use it
+        exactly as they use a private cache.  Pins the current L0 within
+        ``pin_l0_bytes`` immediately (charged: a mid-life attach's resident
+        blocks are real reads, same as :meth:`configure_cache`).
+        """
+        self.block_cache = cache
+        self.pinned_l0 = PinnedLevelManager(cache, pin_l0_bytes)
         with self._maint_lock:
             self.pinned_l0.repin(self._levels[0], stats=self.stats)
 
@@ -233,6 +271,12 @@ class LSMStore:
             if self.memtable.is_full():
                 self._on_memtable_full()
             i = j
+
+    def fsync_wal(self) -> None:
+        """Explicit durability barrier on the active WAL (group commit for
+        callers that batch writes and fsync once, e.g. the checkpoint
+        store's save path)."""
+        self.wal.fsync(self.stats)
 
     def _on_memtable_full(self):
         """Full write buffer: flush inline (sync) or rotate + enqueue (async).
@@ -1037,13 +1081,20 @@ class LSMStore:
         """Logical entry count (newest versions only, tombstones excluded)."""
         return self._live_profile()[0]
 
-    def space_amplification(self) -> float:
-        """Physical bytes stored / logical bytes of the live newest versions
-        (RocksDB's definition; 1.0 when nothing is live)."""
+    def _space_profile(self) -> Tuple[int, int]:
+        """(physical bytes stored, logical live bytes) — the two terms of
+        space amplification, exposed separately so the sharded facade can
+        sum shards before dividing (a mean of per-shard ratios is wrong
+        when shard sizes differ)."""
         mems = self._mem_sources()      # memtables BEFORE levels, as above
         phys = sum(r.data_bytes for lvl in self._levels for r in lvl) \
             + sum(mt.size_bytes for mt in mems)
-        logical = self._live_profile()[1]
+        return phys, self._live_profile()[1]
+
+    def space_amplification(self) -> float:
+        """Physical bytes stored / logical bytes of the live newest versions
+        (RocksDB's definition; 1.0 when nothing is live)."""
+        phys, logical = self._space_profile()
         if logical == 0:
             return 1.0
         return phys / logical

@@ -39,6 +39,7 @@ Safety
 from __future__ import annotations
 
 import os
+import sys
 import threading
 import weakref
 from collections import deque
@@ -47,21 +48,41 @@ from typing import Callable, Deque, Optional
 from .memtable import ImmutableMemtable
 
 
-def _pin_worker_to_spare_core() -> None:
-    """Best-effort: move the calling worker thread onto the last core of the
-    process affinity set, leaving the earlier cores to the foreground.
+def _pin_worker_to_spare_core(offset: int = 0) -> None:
+    """Best-effort: move the calling worker thread onto one of the trailing
+    cores of the process affinity set, leaving the first core to the
+    foreground.
 
     Production stores give background compaction pools dedicated cores for
     exactly this reason (RocksDB's background-thread affinity): without it
     the OS migrates the write-path thread onto the worker's core mid-burst
-    and the two ping-pong.  On Linux ``sched_setaffinity(0, ...)`` scopes to
-    the calling *thread*; no-ops (with the full mask kept) on single-core
-    affinities and on platforms without the syscall.
+    and the two ping-pong.  ``offset`` spreads per-shard schedulers'
+    workers round-robin from the last core downwards (DESIGN.md §12) —
+    offset 0 is the last core, exactly the pre-sharding behavior; with
+    more shards than spare cores the wrap reaches the foreground's core,
+    which is the right trade once the foreground finishes and the drain
+    phase would otherwise leave that core idle.  On Linux
+    ``sched_setaffinity(0, ...)`` scopes to the calling *thread*; no-ops
+    (with the full mask kept) on single-core affinities and on platforms
+    without the syscall.
     """
     try:
         aff = sorted(os.sched_getaffinity(0))
         if len(aff) > 1:
-            os.sched_setaffinity(0, {aff[-1]})
+            os.sched_setaffinity(0, {aff[-1 - (offset % len(aff))]})
+    except (AttributeError, OSError):
+        pass
+    try:
+        # Background work must lose scheduling ties against the foreground
+        # writer (RocksDB runs its compaction pool at low priority for the
+        # same reason): with several shards' workers runnable at once, an
+        # equal-priority pool would take a proportional share of the
+        # writer's core/GIL time mid-burst.  Linux-only on purpose: there
+        # ``who=0`` scopes setpriority to the calling *thread* (the kernel
+        # takes a TID); on other POSIX systems the same call would renice
+        # the whole process — writer included — irreversibly.
+        if sys.platform.startswith("linux"):
+            os.setpriority(os.PRIO_PROCESS, 0, 10)
     except (AttributeError, OSError):
         pass
 
@@ -107,13 +128,25 @@ class CompactJob:
 
 
 class CompactionScheduler:
-    def __init__(self, store, workers: int = 1):
+    def __init__(self, store, workers: int = 1,
+                 budget: Optional[threading.Semaphore] = None,
+                 worker_offset: int = 0):
         # Weak reference only: the parked worker threads must not root the
         # store.  An async store whose owner drops every reference (without
         # calling close()) stays collectable — the workers notice the dead
         # ref on their idle-wait heartbeat and exit, unrooting the
         # scheduler itself.
+        #
+        # ``budget`` (sharded facade, DESIGN.md §12): a semaphore shared by
+        # N sibling schedulers bounding how many background jobs run
+        # concurrently across the whole facade — each shard keeps its own
+        # determinism turnstile (one in-flight job per shard, queue order),
+        # while the shared budget caps total background CPU at
+        # ``compaction_workers``.  ``worker_offset`` spreads the pools over
+        # the spare cores.
         self._store = weakref.ref(store)
+        self._budget = budget
+        self._worker_offset = int(worker_offset)
         self.workers = max(1, int(workers))
         self._mu = threading.Lock()
         self._cv = threading.Condition(self._mu)
@@ -153,7 +186,7 @@ class CompactionScheduler:
 
     # --------------------------------------------------------------- workers
     def _loop(self) -> None:
-        _pin_worker_to_spare_core()
+        _pin_worker_to_spare_core(self._worker_offset)
         while True:
             with self._cv:
                 # turnstile: strict one-job-at-a-time in FIFO order is the
@@ -173,7 +206,17 @@ class CompactionScheduler:
             cont = None
             try:
                 if not self._abort and store is not None:
-                    cont = job.run(store)
+                    if self._budget is None:
+                        cont = job.run(store)
+                    else:
+                        # Shared worker budget: at most `budget` jobs run
+                        # at once across all sibling shards' schedulers.
+                        # Acquired outside the condition (no lock held), so
+                        # a waiting shard never blocks another's turnstile;
+                        # abort is re-checked after the wait.
+                        with self._budget:
+                            if not self._abort:
+                                cont = job.run(store)
             except BaseException as e:    # worker must survive a failed job:
                 with self._cv:            # a dead consumer would deadlock
                     if self._failure is None:   # writers at the stall trigger

@@ -1,0 +1,414 @@
+"""Sharded keyspace: N independent LSMStores behind one facade (DESIGN.md §12).
+
+PR 4's determinism turnstile serializes one background job per store, so a
+single tree can never use more than one core of background compaction.  The
+standard route to multi-core scale (the partitioning survey in Luo & Carey;
+RocksDB column families / CockroachDB ranges) is to *range-partition* the key
+space into N fully independent trees:
+
+``ShardedLSMStore``
+    Order-preserving splitters (``shards - 1`` ascending uint64 bounds; key k
+    lives in the first shard whose splitter exceeds it) route every key to
+    exactly one inner :class:`LSMStore`.  Each shard owns its WAL + memtable,
+    its Manifest/RunStorage, and its own ``CompactionScheduler`` — background
+    flush/compaction runs genuinely in parallel across shards, bounded by a
+    *shared worker budget* (one semaphore sized ``compaction_workers``, so N
+    shards never oversubscribe the machine).  The facade presents the entire
+    single-store API: batched ops are split by ONE vectorized
+    ``np.searchsorted`` against the splitters and fanned out per shard;
+    cross-shard ``scan``/``seek`` exploit the order-preserving partition —
+    shard i's keys all precede shard i+1's, so a range read is a
+    shard-ordered concatenation, not a merge.
+
+Shared memory subsystem
+    All shards share one budgeted :class:`BlockCache`: each shard reads
+    through a namespaced ``BlockCacheView`` with a ``cache_bytes / N`` slice
+    (admission pressure evicts only the owning namespace's cold entries) and
+    a ``pin_l0_bytes / N`` DRAM-resident L0 slice.  Cache keys are
+    namespaced by shard id and ``retain``/repin/clear are namespace-scoped,
+    so one shard's post-commit invalidation can never evict (or alias) a
+    sibling's live blocks.
+
+Differential contract
+    The plain single store (or ``shards=1``) is the retained oracle: for any
+    op sequence, every read (``get``/``multi_get``/``scan``/``seek``) returns
+    byte-identical results, because each key's ops land on one shard in
+    program order and shard ranges are disjoint.  ``shards=1`` is bit-for-bit
+    the plain store (same flush boundaries, same seqs, same bloom bits).
+    With ``shards>1`` the per-shard trees are smaller — sequence numbers are
+    per-shard and levels are shallower (that depth reduction, plus parallel
+    background work, is the speedup) — so cross-shard equality is defined on
+    read *results*, not run bytes.
+
+Concurrency
+    The facade inherits the engine's single-writer/multi-reader discipline:
+    one foreground thread writes (each shard still sees a single writer);
+    readers are lock-free per shard.  Snapshots pin every shard's current
+    version in shard order (each pin is atomic per shard via the manifest
+    mutex); with the single writer idle, the pinned tuple is exactly the
+    acked state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from bisect import bisect_right
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cache import BlockCache, BlockCacheView
+from .engine import LSMConfig, LSMStore
+from .manifest import Version
+from .types import KEY_DTYPE, IOStats
+
+
+def uniform_splitters(shards: int, key_space: int = 1 << 64
+                      ) -> Tuple[int, ...]:
+    """``shards - 1`` ascending bounds splitting ``[0, key_space)`` evenly.
+
+    The default (full uint64 space) is right for hashed key schemes
+    (AutumnKVCache chain hashes, YCSB's scrambled keys); dense sequential
+    key ranges should pass their own ``key_space``.
+    """
+    return tuple(key_space * (i + 1) // shards for i in range(shards - 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedSnapshot:
+    """One pinned :class:`Version` per shard, in shard order."""
+    versions: Tuple[Version, ...]
+
+
+class ShardedLSMStore:
+    """Range-partitioned facade over ``config.shards`` independent stores.
+
+    Construct via :func:`make_store` (returns a plain :class:`LSMStore`
+    when ``config.shards <= 1``).  All shards share the facade's *live*
+    ``LSMConfig`` object, so runtime toggles (``use_pallas_bloom``,
+    ``slowdown_trigger``/``stall_trigger``) keep reaching every shard with
+    no per-shard plumbing; construction-time fields that must differ per
+    shard (cache/pin budgets, worker counts) are overridden before the
+    shared object is installed.
+    """
+
+    def __init__(self, config: Optional[LSMConfig] = None):
+        self.config = config or LSMConfig(shards=2)
+        n = max(1, int(self.config.shards))
+        splitters = self.config.shard_splitters
+        if splitters is None:
+            splitters = uniform_splitters(n)
+        splitters = [int(s) for s in splitters]
+        if len(splitters) != n - 1:
+            raise ValueError(
+                f"need {n - 1} splitters for {n} shards, got {len(splitters)}")
+        if splitters != sorted(set(splitters)):
+            raise ValueError("splitters must be strictly ascending")
+        self._splitters = np.asarray(splitters, dtype=KEY_DTYPE)
+        self._splitters_list = splitters
+        # Shared worker budget: at most `compaction_workers` background jobs
+        # in flight across ALL shards (each shard still runs its own
+        # one-job-at-a-time determinism turnstile).
+        self._budget = None
+        if self.config.async_compaction:
+            self._budget = threading.Semaphore(
+                max(1, int(self.config.compaction_workers)))
+        shard_cfg = dataclasses.replace(
+            self.config, shards=1, shard_splitters=None,
+            cache_bytes=0, pin_l0_bytes=0,   # cache is shared, attached below
+            compaction_workers=1)            # 1 worker thread per shard pool
+        self.shards: List[LSMStore] = [
+            LSMStore(dataclasses.replace(shard_cfg),
+                     scheduler_budget=self._budget, scheduler_offset=i)
+            for i in range(n)]
+        for s in self.shards:
+            # Live-config sharing: runtime toggles on the facade's config
+            # reach every shard.  Construction-only fields (memtable size,
+            # worker count, cache budgets) were already consumed above.
+            s.config = self.config
+        self.block_cache: Optional[BlockCache] = None
+        if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
+            self._build_shared_cache()
+
+    # ------------------------------------------------------------ partition
+    def _shard_of(self, key: int) -> int:
+        return bisect_right(self._splitters_list, int(key))
+
+    def _split(self, keys_arr: np.ndarray) -> np.ndarray:
+        """Vectorized shard assignment: one searchsorted for the batch."""
+        return np.searchsorted(self._splitters, keys_arr, side="right")
+
+    # ---------------------------------------------------------------- cache
+    def _build_shared_cache(self) -> None:
+        """One budgeted BlockCache, one namespaced view + L0 slice per shard."""
+        cfg = self.config
+        n = len(self.shards)
+        self.block_cache = BlockCache(cfg.cache_bytes, cfg.cache_policy)
+        per_cache = cfg.cache_bytes // n
+        per_pin = cfg.pin_l0_bytes // n
+        for i, s in enumerate(self.shards):
+            s.attach_cache(BlockCacheView(self.block_cache, i, per_cache),
+                           per_pin)
+
+    def configure_cache(self, cache_bytes: int, pin_l0_bytes: int = 0,
+                        policy: Optional[str] = None) -> None:
+        """(Re)build the shared memory subsystem on a live facade.
+
+        Mirrors ``LSMStore.configure_cache``: replaces any existing cache
+        (contents dropped), slices the budgets ``1/N`` per shard, and
+        repins every shard's current L0 (charged).  Zeros detach.
+        """
+        self.config.cache_bytes = int(cache_bytes)
+        self.config.pin_l0_bytes = int(pin_l0_bytes)
+        if policy is not None:
+            self.config.cache_policy = policy
+        if cache_bytes <= 0 and pin_l0_bytes <= 0:
+            self.block_cache = None
+            for s in self.shards:
+                s.block_cache = None
+                s.pinned_l0 = None
+            return
+        self._build_shared_cache()
+
+    # ------------------------------------------------------------- writes
+    def put(self, key: int, value: bytes) -> None:
+        self.shards[self._shard_of(key)].put(key, value)
+
+    def delete(self, key: int) -> None:
+        self.shards[self._shard_of(key)].delete(key)
+
+    def put_batch(self, keys, values) -> None:
+        """Batched puts, split per shard by one vectorized searchsorted.
+
+        A broadcast value (one ``bytes`` for every key) splits entirely in
+        numpy — no per-element Python indexing on the ingest hot path."""
+        if isinstance(values, (bytes, bytearray)):
+            keys_arr = np.asarray(keys, dtype=KEY_DTYPE)
+            sids = self._split(keys_arr)
+            val = bytes(values)
+            for si in np.unique(sids):
+                self.shards[int(si)].put_batch(
+                    keys_arr[sids == si].tolist(), val)
+            return
+        self.write_batch(zip(keys, values))
+
+    def delete_batch(self, keys) -> None:
+        self.write_batch((k, None) for k in keys)
+
+    def write_batch(self, ops: Iterable[Tuple[int, Optional[bytes]]]) -> None:
+        """Batched puts + deletes: one searchsorted assigns every op its
+        shard; each shard then ingests its sub-batch through its own
+        vectorized ``write_batch`` lane.  Per-key op order is preserved
+        (the split is a stable partition), so the final state equals the
+        single-store oracle's for the same sequence.
+        """
+        pairs = list(ops)
+        if not pairs:
+            return
+        keys_arr = np.fromiter((int(k) for k, _ in pairs), KEY_DTYPE,
+                               len(pairs))
+        sids = self._split(keys_arr)
+        for si in np.unique(sids):
+            idx = np.nonzero(sids == si)[0]
+            self.shards[int(si)].write_batch(pairs[int(j)] for j in idx)
+
+    def flush(self) -> None:
+        for s in self.shards:
+            s.flush()
+
+    def fsync_wal(self) -> None:
+        """Durability barrier on every shard's active WAL."""
+        for s in self.shards:
+            s.fsync_wal()
+
+    # -------------------------------------------------------------- reads
+    def _shard_snap(self, snapshot: Optional[ShardedSnapshot], si: int
+                    ) -> Optional[Version]:
+        return None if snapshot is None else snapshot.versions[si]
+
+    def get(self, key: int,
+            snapshot: Optional[ShardedSnapshot] = None) -> Optional[bytes]:
+        si = self._shard_of(key)
+        return self.shards[si].get(key, snapshot=self._shard_snap(snapshot, si))
+
+    def multi_get(self, keys: Sequence[int],
+                  snapshot: Optional[ShardedSnapshot] = None
+                  ) -> List[Optional[bytes]]:
+        """Batched point reads: one searchsorted splits the wave, each
+        shard resolves its sub-batch with its own vectorized ``multi_get``,
+        and results scatter back to the callers' positions."""
+        keys_arr = np.asarray(list(keys), dtype=KEY_DTYPE)
+        n = int(keys_arr.size)
+        results: List[Optional[bytes]] = [None] * n
+        if n == 0:
+            return results
+        sids = self._split(keys_arr)
+        for si in np.unique(sids):
+            idx = np.nonzero(sids == si)[0]
+            sub = self.shards[int(si)].multi_get(
+                keys_arr[idx], snapshot=self._shard_snap(snapshot, int(si)))
+            for j, v in zip(idx, sub):
+                results[int(j)] = v
+        return results
+
+    def seek(self, key: int,
+             snapshot: Optional[ShardedSnapshot] = None) -> Optional[int]:
+        """First key >= key across shards: because the partition is
+        order-preserving, the first shard (in range order) with any
+        result holds the global minimum."""
+        for si in range(self._shard_of(key), len(self.shards)):
+            got = self.shards[si].seek(key,
+                                       snapshot=self._shard_snap(snapshot, si))
+            if got is not None:
+                return got
+        return None
+
+    def scan(self, start_key: int, count: int,
+             snapshot: Optional[ShardedSnapshot] = None
+             ) -> List[Tuple[int, bytes]]:
+        """Range read: shard-ordered concatenation of per-shard scans (no
+        cross-shard merge needed — shard i's keys all precede shard i+1's).
+        Byte-identical to the single-store oracle's ``scan``/``scan_scalar``.
+        """
+        return self._scan_impl(start_key, count, snapshot, scalar=False)
+
+    def scan_scalar(self, start_key: int, count: int,
+                    snapshot: Optional[ShardedSnapshot] = None
+                    ) -> List[Tuple[int, bytes]]:
+        """Reference range read through every shard's ``scan_scalar``."""
+        return self._scan_impl(start_key, count, snapshot, scalar=True)
+
+    def _scan_impl(self, start_key: int, count: int,
+                   snapshot: Optional[ShardedSnapshot], scalar: bool
+                   ) -> List[Tuple[int, bytes]]:
+        out: List[Tuple[int, bytes]] = []
+        for si in range(self._shard_of(start_key), len(self.shards)):
+            need = count - len(out)
+            if need <= 0:
+                break
+            shard = self.shards[si]
+            fn = shard.scan_scalar if scalar else shard.scan
+            out.extend(fn(start_key, need,
+                          snapshot=self._shard_snap(snapshot, si)))
+        return out[:count]
+
+    # ----------------------------------------------------------- snapshots
+    def get_snapshot(self) -> ShardedSnapshot:
+        """Pin every shard's current version (refcounted, in shard order).
+
+        Each per-shard pin is atomic under that shard's manifest mutex;
+        with the facade's single writer quiescent, the tuple is exactly the
+        acked state (background compaction never changes logical content).
+        """
+        return ShardedSnapshot(tuple(s.get_snapshot() for s in self.shards))
+
+    def release_snapshot(self, snapshot: ShardedSnapshot) -> None:
+        for s, v in zip(self.shards, snapshot.versions):
+            s.release_snapshot(v)
+
+    # ------------------------------------------------------------ recovery
+    def crash(self) -> None:
+        """Whole-store crash: every shard aborts its background pipeline and
+        loses volatile state; each shard's fsynced WAL segments + durable
+        manifest survive independently."""
+        for s in self.shards:
+            s.crash()
+
+    def recover(self) -> None:
+        """Recover every shard (durable manifest + consolidated WAL replay),
+        clearing and re-pinning its slice of the shared cache."""
+        for s in self.shards:
+            s.recover()
+
+    def close(self) -> None:
+        """Drain and stop every shard's background workers (each shard then
+        serves on the synchronous, state-equivalent path)."""
+        err = None
+        for s in self.shards:
+            try:
+                s.close()
+            except BaseException as e:   # close every shard before raising
+                err = err or e
+        if err is not None:
+            raise err
+
+    def wait_for_quiesce(self, timeout: Optional[float] = None) -> bool:
+        """Block until every shard's background pipeline drains."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        ok = True
+        for s in self.shards:
+            left = None if deadline is None \
+                else max(0.0, deadline - time.monotonic())
+            ok = s.wait_for_quiesce(left) and ok
+        return ok
+
+    # ---------------------------------------------------------------- info
+    @property
+    def stats(self) -> IOStats:
+        """Aggregated counters across shards (a fresh fieldwise-summed
+        ``IOStats`` — use ``snapshot()``/``delta()`` on it as usual)."""
+        return IOStats.merge(s.stats for s in self.shards)
+
+    @property
+    def num_levels_in_use(self) -> int:
+        return max(s.num_levels_in_use for s in self.shards)
+
+    @property
+    def total_entries(self) -> int:
+        return sum(s.total_entries for s in self.shards)
+
+    def total_live_entries(self) -> int:
+        return sum(s.total_live_entries() for s in self.shards)
+
+    def space_amplification(self) -> float:
+        phys = logical = 0
+        for s in self.shards:
+            p, lg = s._space_profile()
+            phys += p
+            logical += lg
+        return phys / logical if logical else 1.0
+
+    def level_summary(self) -> List[dict]:
+        """Per-level aggregate across shards (capacities summed)."""
+        out: List[dict] = []
+        for s in self.shards:
+            for d in s.level_summary():
+                i = d["level"]
+                while len(out) <= i:
+                    out.append(dict(level=len(out), runs=0, entries=0,
+                                    bytes=0, capacity=None))
+                out[i]["runs"] += d["runs"]
+                out[i]["entries"] += d["entries"]
+                out[i]["bytes"] += d["bytes"]
+                if d["capacity"] is not None:
+                    out[i]["capacity"] = (out[i]["capacity"] or 0) \
+                        + d["capacity"]
+        return out
+
+    def cache_summary(self) -> dict:
+        """Shared-cache health: one hit rate, global charged bytes, and the
+        number of DRAM-resident L0 runs across all shards."""
+        if self.block_cache is None:
+            return dict(enabled=False, hit_rate=0.0, hits=0, misses=0,
+                        evictions=0, charged_bytes=0, pinned_bytes=0,
+                        pinned_l0_runs=0)
+        c = self.block_cache
+        return dict(enabled=True, hit_rate=c.hit_rate(), hits=c.hits,
+                    misses=c.misses, evictions=c.evictions,
+                    charged_bytes=c.charged_bytes,
+                    pinned_bytes=c.pinned_bytes,
+                    pinned_l0_runs=sum(
+                        len(s.pinned_l0.pinned_run_ids) for s in self.shards
+                        if s.pinned_l0 is not None))
+
+
+def make_store(config: Optional[LSMConfig] = None):
+    """The store factory every call site uses: a plain :class:`LSMStore`
+    for ``shards <= 1`` (the retained bit-for-bit oracle path), a
+    :class:`ShardedLSMStore` facade otherwise — the ``LSMConfig.shards``
+    knob is the only thing a caller changes."""
+    config = config or LSMConfig()
+    if config.shards <= 1:
+        return LSMStore(config)
+    return ShardedLSMStore(config)

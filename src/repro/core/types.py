@@ -10,7 +10,7 @@ complexity table (Table 2) exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
@@ -70,6 +70,32 @@ class IOStats:
         out = IOStats()
         for f in dataclasses.fields(IOStats):
             setattr(out, f.name, getattr(self, f.name) - getattr(since, f.name))
+        return out
+
+    def __add__(self, other: "IOStats") -> "IOStats":
+        """Fieldwise sum over *every* counter (cache hit/miss, stall_ns,
+        bg_* included automatically — new fields join the sum by being
+        declared, the single place aggregation is defined)."""
+        if not isinstance(other, IOStats):
+            return NotImplemented
+        out = IOStats()
+        for f in dataclasses.fields(IOStats):
+            setattr(out, f.name, getattr(self, f.name) + getattr(other, f.name))
+        return out
+
+    def __radd__(self, other):
+        # sum() support: sum(shard.stats for shard in shards)
+        if other == 0:
+            return self.snapshot()
+        return self.__add__(other)
+
+    @staticmethod
+    def merge(stats: "Iterable[IOStats]") -> "IOStats":
+        """Aggregate many stores' counters into one (the sharded facade's
+        ``stats`` view).  Returns a fresh IOStats; inputs are not mutated."""
+        out = IOStats()
+        for s in stats:
+            out = out + s
         return out
 
 

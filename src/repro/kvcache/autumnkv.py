@@ -23,7 +23,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core import LSMConfig, LSMStore
+from repro.core import LSMConfig, make_store
 from repro.core.types import splitmix64
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -149,17 +149,22 @@ class AutumnKVCache:
         self.cfg = cfg
         self.codec = CacheCodec(cfg, batch, s_max)
         self.page = page_tokens
-        self.db = LSMStore(lsm_config or LSMConfig(
+        self.db = make_store(lsm_config or LSMConfig(
             policy="garnering", T=2.0, c=0.8, memtable_bytes=1 << 20,
             base_level_bytes=8 << 20, bits_per_key=10,
             bloom_allocation="monkey",
             # memory subsystem (DESIGN.md §9): hot page blocks served from
-            # DRAM, L0 pinned so fresh inserts are always resident
+            # DRAM, L0 pinned so fresh inserts are always resident (sharded:
+            # one shared budgeted cache, 1/N slices per shard)
             cache_bytes=4 << 20, pin_l0_bytes=2 << 20,
             # async scheduler (DESIGN.md §11): page-insert bursts after
             # prefill return without paying flush/compaction; lookups read
             # through the immutable-memtable window mid-churn
-            async_compaction=True))
+            async_compaction=True,
+            # sharded keyspace (DESIGN.md §12): chain hashes are uniform over
+            # uint64, so the default splitters balance; two shards run
+            # background flush/compaction in parallel under one worker budget
+            shards=2, compaction_workers=2))
         self.hits = 0
         self.misses = 0
         self.pages_written = 0

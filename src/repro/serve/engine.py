@@ -10,6 +10,11 @@ The request path (per batch):
 Continuous batching at framework scale would slot new requests into finished
 rows; here a batch is a "wave", which is enough to exercise the storage path
 and the decode kernels end-to-end.
+
+Storage defaults are shard-aware (DESIGN.md §12): the prefix cache's LSM
+runs as a 2-shard `ShardedLSMStore` (chain-hash keys are uniform over
+uint64, so the default splitters balance), so page-insert bursts from
+concurrent waves drain on parallel per-shard background schedulers.
 """
 from __future__ import annotations
 
