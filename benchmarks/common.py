@@ -20,7 +20,8 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             async_compaction: bool = False,
             compaction_workers: int = 1,
             shards: int = 1,
-            shard_key_space: Optional[int] = None) -> LSMStore:
+            shard_key_space: Optional[int] = None,
+            use_range_views: bool = False) -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
     container-scale datasets so the tree reaches realistic depths (L=4..9).
     ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9);
@@ -44,7 +45,8 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
         async_compaction=async_compaction,
         compaction_workers=compaction_workers,
         shards=shards,
-        shard_splitters=splitters))
+        shard_splitters=splitters,
+        use_range_views=use_range_views))
 
 
 def tune_bulk_load(db, n: int, value_size: int) -> None:

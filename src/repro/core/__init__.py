@@ -23,6 +23,7 @@ from .scheduler import CompactionScheduler
 from .sharded import (ShardedLSMStore, ShardedSnapshot, make_store,
                       uniform_splitters)
 from .types import BLOCK_SIZE, KEY_BYTES, IOStats
+from .view import RangeView, build_range_view
 
 __all__ = [
     "LSMStore", "LSMConfig", "IOStats", "BlockCache", "BlockCacheView",
@@ -35,5 +36,6 @@ __all__ = [
     "WriteAheadLog", "POLICIES", "CompactionTask", "Garnering", "LazyLeveling",
     "Leveling", "MergePolicy", "QLSMBush", "Tiering", "make_policy",
     "SortedRun", "build_run", "merge_runs", "merge_runs_scalar",
+    "RangeView", "build_range_view",
     "BLOCK_SIZE", "KEY_BYTES",
 ]

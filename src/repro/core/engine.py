@@ -29,7 +29,7 @@ import numpy as np
 
 from .bloom import allocate_fprs, bits_for_fpr
 from .cache import BlockCache, PinnedLevelManager
-from .iterator import MergingIterator
+from .iterator import MergingIterator, combined_mem_items
 from .manifest import Manifest, RunStorage, Version
 from .memtable import ImmutableMemtable, Memtable, WriteAheadLog
 from .policy import CompactionTask, MergePolicy, make_policy
@@ -37,6 +37,7 @@ from .run import SortedRun, build_run, merge_runs
 from .scheduler import CompactJob, CompactionScheduler, FlushJob
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
                     TOMBSTONE_LEN, IOStats)
+from .view import RangeView, build_range_view
 
 _UNSET = object()
 # Soft write-pressure delay.  LevelDB sleeps 1 ms here, but its pressure unit
@@ -96,6 +97,19 @@ class LSMConfig:
                                         # schedulers and a shared budgeted
                                         # BlockCache (DESIGN.md §12).  Plain
                                         # LSMStore ignores this field.
+    use_range_views: bool = False       # REMIX-style cross-run range views
+                                        # (DESIGN.md §13): a globally-sorted
+                                        # key index over every run, rebuilt
+                                        # off the write path (scheduler
+                                        # workers in async mode, lazily by
+                                        # the first reader in sync mode), so
+                                        # scan/seek cost one binary search +
+                                        # one sequential sweep instead of a
+                                        # per-refill multi-way merge.  The
+                                        # MergingIterator remains both the
+                                        # stale-view fallback and (with
+                                        # scan_scalar) the differential
+                                        # oracle.
     shard_splitters: Optional[Tuple[int, ...]] = None
                                         # order-preserving range splitters
                                         # (shards-1 ascending uint64 bounds;
@@ -137,6 +151,14 @@ class LSMStore:
         # triplet between worker installs and snapshot releases.
         self._imm: List[ImmutableMemtable] = []
         self._maint_lock = threading.Lock()
+        # REMIX-style cross-run range view (DESIGN.md §13).  The view is a
+        # snapshot of one published ``self._levels`` object; freshness is a
+        # pointer compare (copy-on-write installs swap the list object), so
+        # invalidation is free.  ``_view_cache`` memoizes per-level sorted
+        # columns keyed by run-id tuple so rebuilds only re-merge levels
+        # whose membership actually changed.
+        self._range_view: Optional[RangeView] = None
+        self._view_cache: dict = {}
         self._scheduler: Optional[CompactionScheduler] = None
         if self.config.async_compaction:
             self._scheduler = CompactionScheduler(
@@ -646,6 +668,53 @@ class LSMStore:
             for r in reversed(lvl):
                 yield r
 
+    # ------------------------------------------------- range views (§13)
+    def _view_fresh(self) -> Optional[RangeView]:
+        """The current range view iff it indexes the *published* level
+        list.  Copy-on-write installs swap ``self._levels``, so one pointer
+        compare is the entire staleness check — no locks, no epochs."""
+        v = self._range_view
+        if v is not None and v.levels_ref is self._levels:
+            return v
+        return None
+
+    def refresh_range_view(self, background: bool = False
+                           ) -> Optional[RangeView]:
+        """(Re)build the cross-run range view from the published levels.
+
+        Incremental: per-level sorted columns are cached by run-id tuple
+        (``self._view_cache``), so only levels whose membership changed
+        since the last rebuild are re-sorted.  Called by a scheduler worker
+        once the tree is shaped (``background=True``) or lazily by the
+        first view-eligible read in sync mode — never by the write path.
+        """
+        if not self.config.use_range_views:
+            return None
+        levels = self._levels
+        v = self._range_view
+        if v is not None and v.levels_ref is levels:
+            return v
+        t0 = time.perf_counter_ns()
+        view = build_range_view(levels, self._view_cache)
+        self.stats.view_rebuilds += 1
+        if background:
+            self.stats.bg_view_rebuilds += 1
+        self.stats.view_entries_built += len(view)
+        self.stats.view_rebuild_ns += time.perf_counter_ns() - t0
+        self._range_view = view
+        return view
+
+    def _bg_refresh_view(self) -> None:
+        """Scheduler hook: piggyback a view rebuild on the worker that just
+        found the tree quiet (CompactJob with no task to run).  The rebuild
+        re-uses the sort work that compaction already paid; foreground
+        writes never rebuild."""
+        if not self.config.use_range_views:
+            return
+        if self._scheduler is not None and self._scheduler.aborting:
+            return
+        self.refresh_range_view(background=True)
+
     def get(self, key: int, snapshot: Optional[Version] = None) -> Optional[bytes]:
         self.stats.point_reads += 1
         if snapshot is None:
@@ -790,6 +859,20 @@ class LSMStore:
         # first and pops the immutable memtable second, so this capture order
         # makes the race a benign duplicate, never a lost read (_mem_sources)
         mems = self._mem_sources() if snapshot is None else []
+        if snapshot is None and self.config.use_range_views:
+            view = self._view_fresh()
+            if view is None and self._scheduler is None:
+                view = self.refresh_range_view()
+            if view is not None:
+                self.stats.view_scans += 1
+                best = view.seek(int(key), self.stats, self.block_cache)
+                # same approximate-liveness memtable probe as the run walk
+                for mt in mems:
+                    for k, s, v in mt.scan(int(key))[:1]:
+                        if v is not None and (best is None or k < best):
+                            best = k
+                return best
+            self.stats.view_fallbacks += 1
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if len(run) == 0:
                 continue
@@ -833,8 +916,30 @@ class LSMStore:
         One seek per run positions a cursor; the merged stream then refills
         incrementally per run (no restart loop), charging each run the blocks
         it actually contributed — see core.iterator.
+
+        With ``use_range_views`` (DESIGN.md §13) a live, *fresh* range view
+        replaces all of that with one binary search + one sequential sweep
+        + one batched gather per touched run.  A stale view (async churn
+        between the last background rebuild and now) falls back to the
+        merging iterator and counts ``view_fallbacks`` — the result is
+        identical either way, only the cost differs.
         """
         self.stats.range_reads += 1
+        if snapshot is None and self.config.use_range_views:
+            # memtables BEFORE the view/levels capture (see seek): a racing
+            # install contributes a benign duplicate, never a lost read
+            mems = self._mem_sources()
+            view = self._view_fresh()
+            if view is None and self._scheduler is None:
+                view = self.refresh_range_view()  # lazy in sync mode
+            if view is not None:
+                self.stats.view_scans += 1
+                mems = [m for m in mems if len(m)]   # empty => pure sweep
+                mem_items = (combined_mem_items(mems, int(start_key))
+                             if mems else [])
+                return view.scan(int(start_key), count, mem_items,
+                                 self.stats, self.block_cache)
+            self.stats.view_fallbacks += 1
         it = self.iterator(snapshot)
         return it.scan(int(start_key), count)
 

@@ -48,6 +48,27 @@ _FIRST_DEMAND = 16
 _MAX_WINDOW = 4096
 
 
+def combined_mem_items(memtables: Sequence[Memtable], key: int
+                       ) -> List[Tuple[int, int, Optional[bytes]]]:
+    """Newest-wins combination of the memtable rotation queue's scans.
+
+    ``memtables`` is newest first ([active, imm_newest, ..., imm_oldest],
+    the engine's ``_mem_sources`` order); the first source holding a key
+    owns it, so the merge core (and the range view's scan, DESIGN.md §13)
+    sees one key-sorted memtable stream.
+    """
+    if not memtables:
+        return []
+    if len(memtables) == 1:
+        return memtables[0].scan(key)
+    combined = {}
+    for mt in memtables:
+        for k, s, v in mt.scan(key):
+            if k not in combined:
+                combined[k] = (s, v)
+    return [(k, s, v) for k, (s, v) in sorted(combined.items())]
+
+
 class _RunCursor:
     """Forward-only position over one immutable run, with block accounting."""
 
@@ -129,6 +150,7 @@ class MergingIterator:
         self._mem_pos = 0
         self._max_window = max(int(chunk), _FIRST_DEMAND)
         self._demand = _FIRST_DEMAND
+        self._tomb_carry = 0
         self._exhausted = True
         self._bk: List[int] = []                    # emitted keys
         self._bv: List[Optional[bytes]] = []        # emitted values (aligned)
@@ -144,24 +166,12 @@ class MergingIterator:
         key = int(key)
         for cur in self._cursors:
             cur.seek(key)
-        if len(self._memtables) == 1:
-            self._mem_items = self._memtables[0].scan(key)
-        elif self._memtables:
-            # newest-memtable-wins dedup across the rotation queue: the
-            # first source holding a key owns it (sources are newest first)
-            combined = {}
-            for mt in self._memtables:
-                for k, s, v in mt.scan(key):
-                    if k not in combined:
-                        combined[k] = (s, v)
-            self._mem_items = [(k, s, v)
-                               for k, (s, v) in sorted(combined.items())]
-        else:
-            self._mem_items = []
+        self._mem_items = combined_mem_items(self._memtables, key)
         self._mem_keys = np.fromiter((e[0] for e in self._mem_items),
                                      KEY_DTYPE, len(self._mem_items))
         self._mem_pos = 0
         self._demand = max(int(expected), _FIRST_DEMAND)
+        self._tomb_carry = 0
         self._exhausted = False
         self._bk = []
         self._bv = []
@@ -211,10 +221,23 @@ class MergingIterator:
 
     # ---------------------------------------------------------------- merge
     def _refill(self) -> bool:
-        """Merge the sources' next windows into the emit buffer."""
-        demand = self._demand
-        self._demand = min(demand * 2, self._max_window)
-        w = min(max(2 * demand, _FIRST_DEMAND), self._max_window)
+        """Merge the sources' next windows into the emit buffer.
+
+        ``demand`` — the emission cap — is the base geometric ramp plus
+        *twice* the count of tombstone winners the previous refill emitted
+        (``_tomb_carry``): tombstones occupy demand slots but yield no live
+        entries, so without the carry a scan over a heavily-deleted range
+        degrades to O(deleted / max_window) refills of mostly-dead winners.
+        The 2x is what makes the growth geometric — a refill that was all
+        tombstones doubles the next dead-prefix budget (carry alone would
+        only add ``max_window`` per refill: O(sqrt(deleted)) refills, not
+        O(log)).  The window follows demand past the ``_MAX_WINDOW`` cap
+        when tombstone-driven, so the refill count stays O(log deleted).
+        """
+        demand = self._demand + 2 * self._tomb_carry
+        self._demand = min(self._demand * 2, self._max_window)
+        w = min(max(2 * demand, _FIRST_DEMAND),
+                max(self._max_window, demand))
         # 1. windows, newest source first (memtable, then runs)
         parts_k: List[np.ndarray] = []
         sids: List[int] = []                        # -1 = memtable
@@ -304,4 +327,7 @@ class MergingIterator:
         self._bk = wkeys.tolist()
         self._bv = vals
         self._bi = 0
+        # tombstone winners consumed demand without yielding entries; grow
+        # the next refill's demand by exactly that count (see docstring)
+        self._tomb_carry = vals.count(None)
         return True

@@ -30,7 +30,7 @@ _run_ids = itertools.count()
 class SortedRun:
     __slots__ = ("run_id", "keys", "seqs", "vlens", "vals", "block_of",
                  "fence_keys", "n_blocks", "data_bytes", "block_size",
-                 "bloom", "level_hint")
+                 "bloom", "level_hint", "_uniform_vals")
 
     def __init__(self, keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
                  vals: np.ndarray, bits_per_key: float = 0.0,
@@ -60,6 +60,7 @@ class SortedRun:
             self.fence_keys = np.zeros(0, dtype=KEY_DTYPE)
         self.bloom = BloomFilter(self.keys, bits_per_key, hash_fn=hash_fn)
         self.level_hint = -1  # set by the manifest; informational
+        self._uniform_vals = None  # lazy: every value full-width, no tombs?
 
     # ------------------------------------------------------------------ size
     def __len__(self) -> int:
@@ -184,6 +185,34 @@ class SortedRun:
             if vlen != TOMBSTONE_LEN:
                 values[j] = bytes(self.vals[i, :vlen])
         return found, values
+
+    def values_at(self, rows: np.ndarray) -> List[Optional[bytes]]:
+        """Batched value extraction for the given rows: one row-gather +
+        one ``tobytes`` for the whole batch (the same idiom the merging
+        iterator uses per refill), ``None`` at tombstone rows.  Used by the
+        range-view scan's per-run materialization (DESIGN.md §13)."""
+        vmax = self.vals.shape[1] if self.vals.ndim == 2 else 0
+        if vmax == 0:
+            return [None if l == TOMBSTONE_LEN else b""
+                    for l in self.vlens[rows].tolist()]
+        if self._uniform_vals is None:
+            # runs are immutable: pay the whole-run check once, then every
+            # fixed-value_size workload splits at a fixed stride with no
+            # per-row length gather at all
+            self._uniform_vals = bool((self.vlens == vmax).all())
+        if self._uniform_vals:
+            flat = self.vals[rows].tobytes()
+            return [flat[o:o + vmax] for o in range(0, len(flat), vmax)]
+        lens = self.vlens[rows].tolist()
+        flat = self.vals[rows].tobytes()
+        out: List[Optional[bytes]] = []
+        for o, l in enumerate(lens):
+            if l == TOMBSTONE_LEN:
+                out.append(None)
+            else:
+                off = o * vmax
+                out.append(flat[off:off + l])
+        return out
 
     def seek_idx(self, key: int) -> int:
         return int(np.searchsorted(self.keys, np.uint64(key), side="left"))

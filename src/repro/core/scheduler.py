@@ -121,7 +121,14 @@ class CompactJob:
     def run(self, store) -> Optional["CompactJob"]:
         task = store._bg_compact_one()
         self.last_task = task
-        return CompactJob() if task is not None else None
+        if task is not None:
+            return CompactJob()
+        # Tree is shaped: this worker just paid for the sort work a range
+        # view reuses, so refresh the view here (DESIGN.md §13) — the
+        # foreground write path never rebuilds.  No-op unless the store has
+        # ``use_range_views`` set.
+        store._bg_refresh_view()
+        return None
 
     def __repr__(self):
         return f"CompactJob(last={self.last_task})"

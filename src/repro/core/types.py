@@ -56,6 +56,13 @@ class IOStats:
     bg_compactions: int = 0       # compaction tasks applied by a worker thread
     wal_appends: int = 0
     wal_fsyncs: int = 0
+    view_rebuilds: int = 0        # cross-run range-view rebuilds (§13)
+    bg_view_rebuilds: int = 0     # rebuilds run by a scheduler worker
+    view_entries_built: int = 0   # entries indexed across all rebuilds
+    view_rebuild_ns: int = 0      # wall time spent rebuilding views
+    view_scans: int = 0           # range reads served by a range view
+    view_fallbacks: int = 0       # view-eligible reads served by the
+                                  # merging iterator (view stale mid-churn)
 
     def write_amplification(self) -> float:
         """Average number of times each flushed byte was rewritten."""

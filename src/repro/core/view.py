@@ -1,0 +1,343 @@
+"""REMIX-style cross-run range views (DESIGN.md §13).
+
+The ``MergingIterator`` pays a per-source frontier merge on every scan
+refill: window every run, clamp to the frontier, stable-sort the concat,
+dedup.  REMIX (Zhong et al., FAST'21) observes that the sort work a scan
+repeats on every refill was already paid once — at compaction time — so a
+*globally-sorted view* across the runs can be maintained out of band and a
+range read collapses to one binary search plus one sequential sweep.
+
+:class:`RangeView` is that structure for one tree (one per store; the
+sharded facade gets one per shard): four parallel columns over every entry
+of every run, sorted by key with exactly one row per key (the newest
+version wins, exactly the merge resolution order):
+
+  ``keys``  uint64, strictly increasing — the global sorted key index
+  ``src``   int32 index into ``runs`` (the view's newest-first run list)
+  ``rows``  int64 row of the winning version inside its run
+  ``live``  bool, False where the winning version is a tombstone
+
+A scan binary-searches ``keys`` once, sweeps ``live`` forward until it has
+``count`` set bits (growing the sweep window geometrically, so
+tombstone-dense ranges cost O(log deleted) sweeps, not O(deleted/window)),
+then materializes values with one batched row-gather per touched run —
+no per-refill multi-way merge, no per-entry Python in the common path.
+Entries still in memtables are merged in on top (they are newer than every
+run by construction); with the memtables empty the sweep is pure.
+
+Rebuilds are *incremental at compaction boundaries*: per-level sorted
+columns are cached by the level's run-id tuple, so an install that touched
+levels src/dst recomputes only those levels' columns (a flush resorts only
+L0) before one radix argsort re-merges the level streams.  The engine's
+copy-on-write level lists make invalidation free: a view remembers the
+exact ``_levels`` list object it was built from (``levels_ref``), and any
+install swaps that reference — ``levels_ref is store._levels`` is the
+entire freshness check.  Runs referenced by a stale view are immutable and
+held alive by the view itself, so a racing install can never tear a scan.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .run import SortedRun
+from .types import KEY_DTYPE, TOMBSTONE_LEN, IOStats
+
+# Per-level sorted columns: (keys, src_local, rows, live).
+LevelColumns = Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+
+
+def _level_columns(runs_newest_first: Sequence[SortedRun]) -> LevelColumns:
+    """Sorted newest-wins columns across one level's runs.
+
+    Single-run levels (every level >= 1 after a leveled merge) are free:
+    the columns are views/aranges over the run's own arrays.  Multi-run
+    levels (L0 tiering) pay one stable argsort + first-occurrence dedup.
+    """
+    if len(runs_newest_first) == 1:
+        r = runs_newest_first[0]
+        n = len(r)
+        return (r.keys, np.zeros(n, np.int32),
+                np.arange(n, dtype=np.int64), r.vlens != TOMBSTONE_LEN)
+    K = np.concatenate([r.keys for r in runs_newest_first])
+    src = np.concatenate([np.full(len(r), i, np.int32)
+                          for i, r in enumerate(runs_newest_first)])
+    rows = np.concatenate([np.arange(len(r), dtype=np.int64)
+                           for r in runs_newest_first])
+    vl = np.concatenate([r.vlens for r in runs_newest_first])
+    order = np.argsort(K, kind="stable")
+    Ks = K[order]
+    first = np.empty(Ks.size, dtype=bool)
+    first[0] = True
+    np.not_equal(Ks[1:], Ks[:-1], out=first[1:])
+    sel = order[first]
+    return Ks[first], src[sel], rows[sel], vl[sel] != TOMBSTONE_LEN
+
+
+def build_range_view(levels: Sequence[Sequence[SortedRun]],
+                     level_cache: Optional[Dict[Tuple[int, ...],
+                                                LevelColumns]] = None
+                     ) -> "RangeView":
+    """Build the global view from a captured (copy-on-write) level list.
+
+    ``level_cache`` maps a level's run-id tuple to its sorted columns;
+    levels untouched since the last rebuild reuse their cached columns
+    (the incremental half of the rebuild), and entries for retired run
+    sets are pruned so the cache never roots dead runs.
+    """
+    runs: List[SortedRun] = []
+    parts_k: List[np.ndarray] = []
+    parts_src: List[np.ndarray] = []
+    parts_rows: List[np.ndarray] = []
+    parts_live: List[np.ndarray] = []
+    live_keys = set()
+    for lvl in levels:
+        rr = [r for r in reversed(lvl) if len(r)]  # newest first within level
+        if not rr:
+            continue
+        ck = tuple(r.run_id for r in rr)
+        live_keys.add(ck)
+        cols = level_cache.get(ck) if level_cache is not None else None
+        if cols is None:
+            cols = _level_columns(rr)
+            if level_cache is not None:
+                level_cache[ck] = cols
+        off = len(runs)
+        runs.extend(rr)
+        k, s, rw, lv = cols
+        parts_k.append(k)
+        parts_src.append(s if off == 0 else s + np.int32(off))
+        parts_rows.append(rw)
+        parts_live.append(lv)
+    if level_cache is not None:
+        for stale in [k for k in level_cache if k not in live_keys]:
+            del level_cache[stale]
+    if not parts_k:
+        z = np.zeros(0, dtype=KEY_DTYPE)
+        return RangeView(levels, [], z, np.zeros(0, np.int32),
+                         np.zeros(0, np.int64), np.zeros(0, bool))
+    if len(parts_k) == 1:
+        return RangeView(levels, runs, parts_k[0], parts_src[0],
+                         parts_rows[0], parts_live[0])
+    # Level streams concatenated newest-level-first + one stable (radix)
+    # argsort: the first occurrence of each key is its newest version —
+    # the same resolution the point-read path walks run by run.
+    K = np.concatenate(parts_k)
+    order = np.argsort(K, kind="stable")
+    Ks = K[order]
+    first = np.empty(Ks.size, dtype=bool)
+    first[0] = True
+    np.not_equal(Ks[1:], Ks[:-1], out=first[1:])
+    sel = order[first]
+    return RangeView(levels, runs,
+                     Ks[first],
+                     np.concatenate(parts_src)[sel],
+                     np.concatenate(parts_rows)[sel],
+                     np.concatenate(parts_live)[sel])
+
+
+class RangeView:
+    """One immutable globally-sorted view of one tree (see module doc)."""
+
+    __slots__ = ("levels_ref", "runs", "keys", "src", "rows", "live",
+                 "all_live")
+
+    def __init__(self, levels_ref, runs: List[SortedRun], keys: np.ndarray,
+                 src: np.ndarray, rows: np.ndarray, live: np.ndarray):
+        self.levels_ref = levels_ref   # identity token: the exact COW list
+        self.runs = runs               # newest-first, holds the runs alive
+        self.keys = keys
+        self.src = src
+        self.rows = rows
+        self.live = live
+        # paid once per rebuild: a tombstone-free view sweeps without ever
+        # touching the liveness bitmap (the overwhelmingly common shape)
+        self.all_live = bool(live.all())
+
+    def __len__(self) -> int:
+        return int(self.keys.size)
+
+    # ------------------------------------------------------------------ reads
+    def seek(self, key: int, stats: Optional[IOStats] = None,
+             cache=None) -> Optional[int]:
+        """First indexed key >= ``key`` (tombstone winners included — the
+        same approximate-liveness contract as ``LSMStore.seek``'s run walk,
+        which doesn't liveness-filter run entries either).  Cost: one
+        binary search + one block touch, against one seek + one block per
+        run on the merging path."""
+        i = int(self.keys.searchsorted(np.uint64(int(key))))
+        if i >= self.keys.size:
+            return None
+        if stats is not None:
+            stats.seeks += 1
+            stats.runs_touched_range += 1
+            run = self.runs[int(self.src[i])]
+            run._charge_block(run.block_of[int(self.rows[i])], stats, cache)
+        return int(self.keys[i])
+
+    def scan(self, start_key: int, count: int,
+             mem_items: Sequence[Tuple[int, int, Optional[bytes]]] = (),
+             stats: Optional[IOStats] = None,
+             cache=None) -> List[Tuple[int, bytes]]:
+        """First ``count`` live entries with key >= start_key.
+
+        ``mem_items`` is the newest-wins-combined, key-sorted memtable
+        stream from ``start_key`` (``iterator.combined_mem_items``); its
+        entries shadow same-key view entries (memtables are newer than
+        every run).  Empty memtables take the pure-sweep fast path.
+        """
+        if count <= 0:
+            return []
+        i0 = int(self.keys.searchsorted(np.uint64(int(start_key))))
+        if not mem_items:
+            return self._scan_sweep(i0, count, stats, cache)
+        return self._scan_with_mem(i0, count, mem_items, stats, cache)
+
+    def _scan_sweep(self, i0: int, count: int, stats, cache
+                    ) -> List[Tuple[int, bytes]]:
+        n = self.keys.size
+        if self.all_live:
+            sl = slice(i0, min(i0 + count, n))
+            vals = self._materialize(sl, stats, cache)
+            return list(zip(self.keys[sl].tolist(), vals))
+        sel: List[int] = []
+        i = i0
+        w = max(2 * count, 32)
+        while len(sel) < count and i < n:
+            hits = np.nonzero(self.live[i:i + w])[0]
+            if hits.size:
+                take = hits[:count - len(sel)]
+                sel.extend((i + take).tolist())
+            i += w
+            w *= 2   # tombstone-dense ranges: O(log deleted) sweeps
+        idx = np.asarray(sel, dtype=np.int64)
+        vals = self._materialize(idx, stats, cache)
+        return list(zip(self.keys[idx].tolist(), vals))
+
+    def _scan_with_mem(self, i0: int, count: int, mem_items, stats, cache
+                       ) -> List[Tuple[int, bytes]]:
+        """Two-source merge: the (small, fully materialized) memtable
+        stream against growing view windows; memtable wins duplicates.
+        Winners accumulate in key order until ``count`` live ones exist,
+        then view winners' values gather in one batch per run."""
+        n = self.keys.size
+        mk = np.fromiter((e[0] for e in mem_items), KEY_DTYPE,
+                         len(mem_items))
+        mem_live = np.fromiter((e[2] is not None for e in mem_items),
+                               bool, len(mem_items))
+        acc_keys: List[int] = []
+        acc_live: List[bool] = []
+        acc_mem: List[int] = []    # memtable row, or -1 for a view winner
+        acc_view: List[int] = []   # view index, or -1 for a memtable winner
+        got = 0
+        mi = 0
+        i = i0
+        w = max(2 * count, 32)
+        while got < count and (i < n or mi < mk.size):
+            vk = self.keys[i:i + w]
+            truncated = i + w < n
+            mrem = mk[mi:]
+            cat = np.concatenate([mrem, vk])
+            if cat.size == 0:
+                break
+            order = np.argsort(cat, kind="stable")  # mem first => mem wins
+            cs = cat[order]
+            first = np.empty(cs.size, dtype=bool)
+            first[0] = True
+            np.not_equal(cs[1:], cs[:-1], out=first[1:])
+            widx = order[first]
+            wkeys = cs[first]
+            if truncated:
+                # keys beyond the view window's frontier may still be
+                # preceded by unseen view keys — defer them
+                frontier = np.uint64(vk[-1])
+                cut = int(wkeys.searchsorted(frontier, side="right"))
+                widx, wkeys = widx[:cut], wkeys[:cut]
+                mem_consumed = int(mrem.searchsorted(frontier, side="right"))
+            else:
+                mem_consumed = int(mrem.size)
+            is_mem = widx < mrem.size
+            liv = np.empty(widx.size, dtype=bool)
+            liv[is_mem] = mem_live[mi + widx[is_mem]]
+            vsel = i + (widx[~is_mem] - mrem.size)
+            liv[~is_mem] = self.live[vsel]
+            for t in range(widx.size):
+                acc_keys.append(int(wkeys[t]))
+                acc_live.append(bool(liv[t]))
+                if is_mem[t]:
+                    acc_mem.append(mi + int(widx[t]))
+                    acc_view.append(-1)
+                else:
+                    acc_mem.append(-1)
+                    acc_view.append(i + int(widx[t]) - int(mrem.size))
+            got += int(np.count_nonzero(liv))
+            mi += mem_consumed
+            i += int(vk.size)
+            w *= 2   # tombstone-dense growth, same law as the pure sweep
+        # Take the first `count` live winners in key order; view winners'
+        # values materialize in one batched gather pass.
+        take: List[int] = []
+        for t in range(len(acc_keys)):
+            if acc_live[t]:
+                take.append(t)
+                if len(take) == count:
+                    break
+        view_slots = [t for t in take if acc_view[t] >= 0]
+        vvals = self._materialize(
+            np.asarray([acc_view[t] for t in view_slots], dtype=np.int64),
+            stats, cache)
+        by_slot = dict(zip(view_slots, vvals))
+        out: List[Tuple[int, bytes]] = []
+        for t in take:
+            if acc_view[t] >= 0:
+                out.append((acc_keys[t], by_slot[t]))
+            else:
+                out.append((acc_keys[t], mem_items[acc_mem[t]][2]))
+        return out
+
+    # ------------------------------------------------------------- gathering
+    def _materialize(self, idx: np.ndarray, stats, cache
+                     ) -> List[Optional[bytes]]:
+        """Values for view indices ``idx`` (all expected live), one batched
+        row-gather + block charge per touched run.
+
+        ``idx`` arrives ascending (scan order), so within each run the
+        gathered rows — and their block ids — are already sorted: group
+        membership and block dedup are boundary scans, never re-sorts.
+        """
+        # ``idx`` may be a slice (contiguous all-live sweep — the column
+        # "gathers" are then zero-copy views) or an int64 index array
+        src = self.src[idx]
+        rows = self.rows[idx]
+        n = int(src.size)
+        out: List[Optional[bytes]] = [None] * n
+        if n == 0:
+            return out
+        order = np.argsort(src, kind="stable")
+        ssrc = src[order]
+        cut = np.nonzero(ssrc[1:] != ssrc[:-1])[0] + 1
+        starts = [0] + cut.tolist()
+        ends = cut.tolist() + [n]
+        for a, b in zip(starts, ends):
+            m = order[a:b]
+            run = self.runs[int(ssrc[a])]
+            rs = rows[m]
+            if stats is not None:
+                bids = run.block_of[rs]       # ascending: rs is ascending
+                if cache is None:
+                    nb = 1 if bids.size <= 1 else \
+                        1 + int(np.count_nonzero(bids[1:] != bids[:-1]))
+                    stats.blocks_read += nb
+                else:
+                    if bids.size > 1:
+                        keep = np.empty(bids.size, dtype=bool)
+                        keep[0] = True
+                        np.not_equal(bids[1:], bids[:-1], out=keep[1:])
+                        bids = bids[keep]
+                    cache.read_blocks(run.run_id, bids.tolist(),
+                                      run.block_bytes, stats)
+            vals = run.values_at(rs)
+            for t, v in zip(m.tolist(), vals):
+                out[t] = v
+        return out

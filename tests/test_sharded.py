@@ -430,3 +430,141 @@ def test_make_store_factory_and_validation():
     # runtime toggles on the facade's config reach every shard (live share)
     db.config.use_pallas_bloom = True
     assert all(s.config.use_pallas_bloom for s in db.shards)
+
+
+# --------------------------------------------------- torn cross-shard snapshots
+def test_snapshot_never_torn_by_racing_cross_shard_writer():
+    """Regression (Issue 6 satellite): ``get_snapshot`` used to pin shard
+    versions one by one with nothing excluding a concurrent cross-shard
+    batch — a writer landing on shards 0 AND 1 between the two pins
+    produced a snapshot holding generation i on one shard and i+1 on the
+    other.  The facade write gate + pin-validate-retry must make every
+    snapshot a point-in-time cut: both halves of every
+    ``write_batch``+``flush`` generation are visible together or not at
+    all.  The race window is widened deliberately by delaying shard 1's
+    pin, which reliably tore snapshots under the old acquisition."""
+    import time as _time
+
+    db = ShardedLSMStore(cfg(shards=2, shard_splitters=(KEY_SPACE // 2,),
+                             memtable_bytes=1 << 12))
+    k0, k1 = KEY_SPACE // 4, 3 * KEY_SPACE // 4      # one key per shard
+    inner = db.shards[1].get_snapshot
+
+    def delayed():                                   # widen pin0 -> pin1 gap
+        _time.sleep(0.0005)
+        return inner()
+
+    db.shards[1].get_snapshot = delayed
+    torn = []
+    stop = threading.Event()
+
+    def snapshotter():
+        while not stop.is_set():
+            snap = db.get_snapshot()
+            try:
+                a = db.get(k0, snapshot=snap)
+                b = db.get(k1, snapshot=snap)
+                if a != b:
+                    torn.append((a, b))
+            finally:
+                db.release_snapshot(snap)
+
+    t = threading.Thread(target=snapshotter)
+    t.start()
+    try:
+        for i in range(120):                # snapshot-visible generations:
+            v = b"gen-%06d" % i             # batch + flush inside the gate
+            db.write_batch([(k0, v), (k1, v)])
+            db.flush()
+    finally:
+        stop.set()
+        t.join(timeout=30)
+        db.shards[1].get_snapshot = inner
+    assert not torn, f"torn snapshots observed: {torn[:5]}"
+    # and the pins all released cleanly
+    for s in db.shards:
+        assert s.manifest.pin_count(s.manifest.current().version_id) == 0
+
+
+def test_snapshot_validate_retry_survives_background_installs():
+    """Async mode: versions install from worker threads outside the write
+    gate.  Acquisition must still return internally consistent pins (each
+    pinned version is a shard's real committed version; no pin leaks), with
+    the documented caveat that batch halves *enter* visibility on their
+    shards' own flush schedules."""
+    db = ShardedLSMStore(sharded_cfg(2, async_compaction=True,
+                                     compaction_workers=2))
+    try:
+        for i in range(6):
+            db.write_batch(gen_ops(90 + i, 400))
+            for _ in range(20):
+                snap = db.get_snapshot()
+                assert len(snap.versions) == 2
+                for s, v in zip(db.shards, snap.versions):
+                    assert s.manifest.pin_count(v.version_id) >= 1
+                db.release_snapshot(snap)
+        db.flush()
+        assert db.wait_for_quiesce(60)
+        snap = db.get_snapshot()
+        live = db.total_live_entries()
+        got = db.scan(0, KEY_SPACE + 1, snapshot=snap)
+        assert len(got) == live        # quiesced: snapshot sees everything
+        db.release_snapshot(snap)
+    finally:
+        close_quiet(db)
+
+
+# ------------------------------------- tombstones straddling a splitter bound
+@pytest.mark.parametrize("shards", [1, 2, 4])
+def test_scan_seek_tombstones_straddling_splitters(shards):
+    """Differential: dense writes + delete bands centered on every splitter
+    (and the keyspace edges) — facade ``scan`` must stay byte-identical to
+    the single-store ``scan_scalar`` oracle from probes on, at, and beyond
+    each boundary, with the tombstones in memtables AND after they flush
+    into runs.  ``seek`` is exact while tombstones are memtable-resident
+    (liveness-filtered identically); once flushed it is asserted against
+    its documented cost-probe contract."""
+    oracle = LSMStore(cfg())
+    db = make_store(sharded_cfg(shards))
+    splitters = list(uniform_splitters(shards, KEY_SPACE))
+    try:
+        for k in range(KEY_SPACE):
+            v = b"s%d-%d" % (shards, k)
+            oracle.put(k, v)
+            db.put(k, v)
+        oracle.flush()
+        db.flush()
+        bands = [range(max(0, s - 12), min(KEY_SPACE, s + 12))
+                 for s in splitters]
+        bands.append(range(0, 9))                    # keyspace edges too
+        bands.append(range(KEY_SPACE - 9, KEY_SPACE))
+        doomed = sorted({k for b in bands for k in b})
+        for k in doomed:
+            oracle.delete(k)
+            db.delete(k)
+        probes = sorted({p for s in splitters + [0, KEY_SPACE - 1]
+                         for p in (s - 13, s - 12, s - 1, s, s + 1, s + 11,
+                                   s + 12)
+                         if 0 <= p < KEY_SPACE})
+        # tombstones memtable-resident: scan AND seek exact vs oracle
+        for p in probes:
+            assert db.scan(p, 30) == oracle.scan_scalar(p, 30), p
+            assert db.seek(p) == oracle.seek(p), p
+        oracle.flush()
+        db.flush()
+        # tombstones flushed into runs (often *straddling* a splitter):
+        # scan stays exact; seek keeps its cost-probe invariant
+        for p in probes:
+            got = db.scan(p, 30)
+            assert got == oracle.scan_scalar(p, 30), p
+            assert got == db.scan_scalar(p, 30), p
+            sk = db.seek(p)
+            if got:
+                assert sk is not None and p <= sk <= got[0][0], (p, sk)
+            elif sk is not None:
+                assert sk >= p
+        assert db.scan(0, KEY_SPACE) == oracle.scan_scalar(0, KEY_SPACE)
+        assert db.total_live_entries() == oracle.total_live_entries()
+    finally:
+        close_quiet(db)
+        close_quiet(oracle)
