@@ -21,7 +21,8 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             compaction_workers: int = 1,
             shards: int = 1,
             shard_key_space: Optional[int] = None,
-            use_range_views: bool = False) -> LSMStore:
+            use_range_views: bool = False,
+            telemetry=None) -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
     container-scale datasets so the tree reaches realistic depths (L=4..9).
     ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9);
@@ -29,7 +30,10 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
     ``shards`` the range-partitioned facade (DESIGN.md §12) — pass
     ``shard_key_space`` for dense key ranges (micro_dbbench's ``[0, 8n)``
     streams) so the splitters balance; hashed keys (ycsb's scrambled keys)
-    balance under the default full-uint64 splitters."""
+    balance under the default full-uint64 splitters; ``telemetry`` attaches
+    a ``repro.core.Telemetry`` facade (DESIGN.md §14) for latency
+    histograms + event tracing (None keeps the zero-overhead disabled
+    path — the default for every existing lane)."""
     splitters = None
     if shards > 1 and shard_key_space is not None:
         splitters = uniform_splitters(shards, shard_key_space)
@@ -46,7 +50,8 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
         compaction_workers=compaction_workers,
         shards=shards,
         shard_splitters=splitters,
-        use_range_views=use_range_views))
+        use_range_views=use_range_views,
+        telemetry=telemetry))
 
 
 def tune_bulk_load(db, n: int, value_size: int) -> None:
@@ -66,6 +71,12 @@ def cache_hit_pct(delta) -> float:
     """Block-cache hit rate (%) over an ``IOStats`` delta window."""
     touched = delta.cache_hit_blocks + delta.cache_miss_blocks
     return 100.0 * delta.cache_hit_blocks / touched if touched else 0.0
+
+
+def stats_row(stats) -> Dict[str, float]:
+    """An ``IOStats`` (or delta) as a stable-key-order dict — the one dump
+    harnesses use for JSON/CSV output instead of ad-hoc field reaching."""
+    return stats.to_dict()
 
 
 def fill_random(db: LSMStore, n: int, value_size: int, seed: int = 1,

@@ -6,7 +6,10 @@ Public API:
     make_policy, Garnering, ...   — merge policies (paper §2.3/§3.1)
     BloomFilter, allocate_fprs    — Monkey/Autumn filter allocation (Eq. 7-10)
     BlockCache, PinnedLevelManager— memory subsystem: block cache + DRAM L0
-    IOStats                       — block-I/O cost accounting
+    IOStats, StatsHub             — block-I/O cost accounting (lossless
+                                    per-thread accumulation)
+    Telemetry, LatencyHistogram,
+    EventTrace                    — latency histograms + event trace (§14)
 """
 from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
                     garnering_theoretical_fprs, theoretical_fpr,
@@ -22,7 +25,8 @@ from .run import SortedRun, build_run, merge_runs, merge_runs_scalar
 from .scheduler import CompactionScheduler
 from .sharded import (ShardedLSMStore, ShardedSnapshot, make_store,
                       uniform_splitters)
-from .types import BLOCK_SIZE, KEY_BYTES, IOStats
+from .telemetry import (EventTrace, LatencyHistogram, Telemetry, TraceEvent)
+from .types import BLOCK_SIZE, KEY_BYTES, IOStats, StatsHub
 from .view import RangeView, build_range_view
 
 __all__ = [
@@ -37,5 +41,6 @@ __all__ = [
     "Leveling", "MergePolicy", "QLSMBush", "Tiering", "make_policy",
     "SortedRun", "build_run", "merge_runs", "merge_runs_scalar",
     "RangeView", "build_range_view",
+    "Telemetry", "LatencyHistogram", "EventTrace", "TraceEvent", "StatsHub",
     "BLOCK_SIZE", "KEY_BYTES",
 ]

@@ -90,6 +90,11 @@ class BlockCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # Optional Telemetry facade (DESIGN.md §14): every 512th eviction
+        # emits a "cache_pressure" trace event so sustained churn shows up
+        # in the timeline without per-eviction cost.  The trace mutex is a
+        # leaf lock, safe to take under this cache's mutex.
+        self.telemetry = None
 
     # -------------------------------------------------------------- accounting
     @property
@@ -233,6 +238,11 @@ class BlockCache:
             if nsk is not None:
                 nsk.pop(key, None)
         self.evictions += 1
+        tel = self.telemetry
+        if tel is not None and self.evictions % 512 == 0:
+            tel.emit("cache_pressure", evictions=self.evictions,
+                     charged_bytes=self._bytes,
+                     capacity_bytes=self.capacity_bytes)
 
     def _evict_one(self) -> None:
         if self.policy == "lru":

@@ -14,9 +14,17 @@ differential oracle after ``wait_for_quiesce``), and write pressure is
 governed by ``slowdown_trigger``/``stall_trigger``.  The engine is
 single-writer multi-reader: one thread writes; readers are lock-free on
 copy-on-write level/queue references and immutable runs.  IOStats counters
-are updated from both foreground and worker threads without a lock — the
-GIL keeps them consistent enough for a cost model, and none of the
-differential oracles compare counters across threading modes.
+are accumulated **losslessly** through a :class:`~repro.core.types.StatsHub`:
+every thread mutates its own private shard (no lock, no lost ``+=``
+read-modify-writes between scheduler workers and foreground threads) and
+``store.stats`` merges the shards fieldwise at read time.
+
+Optional telemetry (DESIGN.md §14): ``LSMConfig.telemetry`` carries a
+:class:`~repro.core.telemetry.Telemetry` facade.  When ``None`` (default)
+every instrumentation site is a single attribute load + ``is None`` test;
+when set, public ops record per-op-class latency into per-thread histograms
+(no locks on the read path) and lifecycle paths (flush/compaction/stall/
+view-rebuild) emit trace events.
 """
 from __future__ import annotations
 
@@ -35,8 +43,9 @@ from .memtable import ImmutableMemtable, Memtable, WriteAheadLog
 from .policy import CompactionTask, MergePolicy, make_policy
 from .run import SortedRun, build_run, merge_runs
 from .scheduler import CompactJob, CompactionScheduler, FlushJob
+from .telemetry import Telemetry
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
-                    TOMBSTONE_LEN, IOStats)
+                    TOMBSTONE_LEN, IOStats, StatsHub)
 from .view import RangeView, build_range_view
 
 _UNSET = object()
@@ -119,6 +128,15 @@ class LSMConfig:
                                         # space (right for hashed keys —
                                         # kvcache/checkpoint; pass explicit
                                         # splitters for dense key ranges)
+    telemetry: Optional[Telemetry] = None
+                                        # latency histograms + event trace
+                                        # (DESIGN.md §14).  None (default)
+                                        # disables all instrumentation — the
+                                        # only residual cost is an `is None`
+                                        # test per public op.  The sharded
+                                        # facade hands its live config to
+                                        # every shard, so one Telemetry
+                                        # aggregates across shards for free.
 
 
 class LSMStore:
@@ -132,7 +150,7 @@ class LSMStore:
         self.policy: MergePolicy = make_policy(
             self.config.policy, T=self.config.T, c=self.config.c,
             l0_trigger=self.config.l0_compaction_trigger)
-        self.stats = IOStats()
+        self._stats = StatsHub()
         self.storage = RunStorage()
         self.manifest = Manifest(self.storage)
         self.memtable = Memtable(self.config.memtable_bytes,
@@ -171,6 +189,31 @@ class LSMStore:
                                  self.config.pin_l0_bytes,
                                  self.config.cache_policy)
 
+    @property
+    def stats(self) -> IOStats:
+        """Merged view of every thread's counter shard (a fresh IOStats —
+        ``.snapshot()``/``.delta()``/field reads all behave as before; the
+        lossless-accumulation design is :class:`~repro.core.types.StatsHub`).
+        Internal mutation sites never touch this property — they charge the
+        calling thread's shard via ``self._stats.local()``."""
+        return self._stats.merged()
+
+    @property
+    def telemetry(self) -> Optional[Telemetry]:
+        return self.config.telemetry
+
+    def _wal_fsync(self, st: IOStats) -> None:
+        """fsync the active WAL, charging ``st`` and (when telemetry is on)
+        recording the fsync latency — the single helper every durability
+        point uses so the ``wal_fsync`` histogram sees all of them."""
+        tel = self.config.telemetry
+        if tel is None:
+            self.wal.fsync(st)
+            return
+        t0 = time.perf_counter_ns()
+        self.wal.fsync(st)
+        tel.record("wal_fsync", time.perf_counter_ns() - t0)
+
     def configure_cache(self, cache_bytes: int, pin_l0_bytes: int = 0,
                         policy: Optional[str] = None) -> None:
         """(Re)build the memory subsystem on a live store.
@@ -190,10 +233,11 @@ class LSMStore:
             self.pinned_l0 = None
             return
         self.block_cache = BlockCache(cache_bytes, policy)
+        self.block_cache.telemetry = self.config.telemetry
         self.pinned_l0 = PinnedLevelManager(self.block_cache, pin_l0_bytes)
         # attaching mid-life: resident L0 blocks must be loaded (charged)
         with self._maint_lock:
-            self.pinned_l0.repin(self._levels[0], stats=self.stats)
+            self.pinned_l0.repin(self._levels[0], stats=self._stats.local())
 
     def attach_cache(self, cache, pin_l0_bytes: int = 0) -> None:
         """Attach an externally owned cache object (the sharded facade's
@@ -209,21 +253,34 @@ class LSMStore:
         self.block_cache = cache
         self.pinned_l0 = PinnedLevelManager(cache, pin_l0_bytes)
         with self._maint_lock:
-            self.pinned_l0.repin(self._levels[0], stats=self.stats)
+            self.pinned_l0.repin(self._levels[0], stats=self._stats.local())
 
     # ------------------------------------------------------------- writes
     def put(self, key: int, value: bytes):
+        tel = self.config.telemetry
+        if tel is None:
+            self._write(key, value)
+            return
+        t0 = time.perf_counter_ns()
         self._write(key, value)
+        tel.record("put", time.perf_counter_ns() - t0)
 
     def delete(self, key: int):
+        tel = self.config.telemetry
+        if tel is None:
+            self._write(key, None)
+            return
+        t0 = time.perf_counter_ns()
         self._write(key, None)
+        tel.record("put", time.perf_counter_ns() - t0)
 
     def _write(self, key: int, value: Optional[bytes]):
+        st = self._stats.local()
         self._seq += 1
         self.wal.append(1 if value is None else 0, key, self._seq,
-                        value or b"", self.stats)
+                        value or b"", st)
         if self.config.wal_fsync_every_write:
-            self.wal.fsync(self.stats)
+            self._wal_fsync(st)
         self.memtable.put(int(key), self._seq, value)
         if self.memtable.is_full():
             self._on_memtable_full()
@@ -237,13 +294,28 @@ class LSMStore:
         """
         if isinstance(values, (bytes, bytearray)):
             values = [bytes(values)] * len(keys)
-        self.write_batch(zip(keys, values))
+        tel = self.config.telemetry
+        if tel is None:
+            self._write_batch(zip(keys, values))
+            return
+        t0 = time.perf_counter_ns()
+        self._write_batch(zip(keys, values))
+        tel.record("put_batch", time.perf_counter_ns() - t0)
 
     def delete_batch(self, keys) -> None:
         """Batched deletes: semantically ``[delete(k) for k in keys]``."""
         self.write_batch((k, None) for k in keys)
 
     def write_batch(self, ops: Iterable[Tuple[int, Optional[bytes]]]) -> None:
+        tel = self.config.telemetry
+        if tel is None:
+            self._write_batch(ops)
+            return
+        t0 = time.perf_counter_ns()
+        self._write_batch(ops)
+        tel.record("write_batch", time.perf_counter_ns() - t0)
+
+    def _write_batch(self, ops: Iterable[Tuple[int, Optional[bytes]]]) -> None:
         """Batched puts + deletes (value=None), the vectorized ingest lane.
 
         Bit-for-bit equivalent to the scalar write loop — same WAL bytes,
@@ -263,6 +335,7 @@ class LSMStore:
         n = len(pairs)
         if n == 0:
             return
+        st = self._stats.local()
         keys_l, vals_l = zip(*pairs)
         keys_l = list(map(int, keys_l))
         # one pass of column prep for the whole batch; chunks take views
@@ -285,9 +358,9 @@ class LSMStore:
             self._seq += j - i
             self.wal.append_batch_cols(
                 chunk_vals, keys_arr[i:j], ops_arr[i:j], vlens[i:j],
-                first_seq, self.stats)
+                first_seq, st)
             if self.config.wal_fsync_every_write:
-                self.wal.fsync(self.stats)
+                self._wal_fsync(st)
             self.memtable.put_batch(keys_l[i:j], chunk_vals, first_seq,
                                     added=int(cum[j - 1] - base))
             if self.memtable.is_full():
@@ -298,7 +371,7 @@ class LSMStore:
         """Explicit durability barrier on the active WAL (group commit for
         callers that batch writes and fsync once, e.g. the checkpoint
         store's save path)."""
-        self.wal.fsync(self.stats)
+        self._wal_fsync(self._stats.local())
 
     def _on_memtable_full(self):
         """Full write buffer: flush inline (sync) or rotate + enqueue (async).
@@ -327,12 +400,18 @@ class LSMStore:
             return
         if len(self.memtable) == 0:
             return
+        st = self._stats.local()
         # Rate limiter: too many L0 runs => write stall until compaction.
         if len(self._levels[0]) >= self.config.l0_stop_writes_trigger:
-            self.stats.write_stalls += 1
+            st.write_stalls += 1
             self._compact_until_quiet()
-        self.wal.fsync(self.stats)
-        run = self.memtable.to_run(self._bits_for_level(0), self.stats,
+        tel = self.config.telemetry
+        t0 = tok = 0
+        if tel is not None:
+            t0 = time.perf_counter_ns()
+            tok = tel.emit("flush_start", entries=len(self.memtable))
+        self._wal_fsync(st)
+        run = self.memtable.to_run(self._bits_for_level(0), st,
                                    hash_fn=self._bloom_hash_fn())
         self.memtable.clear()
         self.wal.truncate()
@@ -341,6 +420,11 @@ class LSMStore:
             levels[0].append(run)  # newest last
             self._levels = levels  # atomic swap: readers never see a torn L0
             self._commit()
+        if tel is not None:
+            dur = time.perf_counter_ns() - t0
+            tel.record("flush", dur)
+            tel.emit("flush_end", token=tok, entries=len(run),
+                     t0=t0, dur_ns=dur)
         self._compact_until_quiet()
 
     # ------------------------------------------------- async rotation path
@@ -357,7 +441,7 @@ class LSMStore:
         if len(self.memtable) == 0:
             return
         self._throttle()
-        self.wal.fsync(self.stats)
+        self._wal_fsync(self._stats.local())
         imm = ImmutableMemtable(self.memtable, self.wal)
         with self._scheduler.lock:
             self._imm = self._imm + [imm]   # copy-on-write: readers hold refs
@@ -379,10 +463,14 @@ class LSMStore:
         time actually lost to pressure (``stall_pct``).
         """
         cfg = self.config
+        st = self._stats.local()
+        tel = cfg.telemetry
         depth = len(self._imm) + len(self._levels[0])
         t0 = time.perf_counter_ns()
         if cfg.stall_trigger > 0 and depth >= cfg.stall_trigger:
-            self.stats.write_stalls += 1
+            st.write_stalls += 1
+            tok = tel.emit("stall_enter", depth=depth) if tel is not None \
+                else 0
             # A stall only waits while the background can still shrink the
             # backlog; once the scheduler is idle the pressure is the tree's
             # steady state (e.g. L0 legitimately holds l0_trigger-1 runs)
@@ -392,12 +480,21 @@ class LSMStore:
                 lambda: sched.idle()
                 or (len(self._imm) + len(self._levels[0]))
                 < cfg.stall_trigger)
+            dt = time.perf_counter_ns() - t0
+            if tel is not None:
+                tel.record("stall", dt)
+                tel.emit("stall_exit", token=tok, depth=depth,
+                         t0=t0, dur_ns=dt)
         elif cfg.slowdown_trigger > 0 and depth >= cfg.slowdown_trigger:
-            self.stats.write_slowdowns += 1
+            st.write_slowdowns += 1
             time.sleep(_SLOWDOWN_SLEEP_S)
+            dt = time.perf_counter_ns() - t0
+            if tel is not None:
+                tel.record("stall", dt)
+                tel.emit("slowdown", depth=depth, t0=t0, dur_ns=dt)
         else:
             return
-        self.stats.stall_ns += time.perf_counter_ns() - t0
+        st.stall_ns += time.perf_counter_ns() - t0
 
     def wait_for_quiesce(self, timeout: Optional[float] = None) -> bool:
         """Block until all background flush/compaction work has drained.
@@ -478,12 +575,18 @@ class LSMStore:
         any later flushes.
         """
         sched = self._scheduler
+        st = self._stats.local()
         if len(self._levels[0]) >= self.config.l0_stop_writes_trigger:
-            self.stats.write_stalls += 1
+            st.write_stalls += 1
             self._compact_until_quiet()
         if sched.aborting:
             return None     # crash in progress: imm stays queued for replay
-        run = imm.memtable.to_run(self._bits_for_level(0), self.stats,
+        tel = self.config.telemetry
+        t0 = tok = 0
+        if tel is not None:
+            t0 = time.perf_counter_ns()
+            tok = tel.emit("flush_start", entries=len(imm.memtable), bg=1)
+        run = imm.memtable.to_run(self._bits_for_level(0), st,
                                   hash_fn=self._bloom_hash_fn())
         if len(run):
             levels = [list(lvl) for lvl in self._levels]
@@ -497,7 +600,12 @@ class LSMStore:
         with sched.lock:
             self._imm = [m for m in self._imm if m is not imm]
             sched.lock.notify_all()     # wake write-pressure waiters
-        self.stats.bg_flushes += 1
+        st.bg_flushes += 1
+        if tel is not None:
+            dur = time.perf_counter_ns() - t0
+            tel.record("flush", dur)
+            tel.emit("flush_end", token=tok, entries=len(run), bg=1,
+                     t0=t0, dur_ns=dur)
         return CompactJob()
 
     def _bg_compact_one(self) -> Optional[CompactionTask]:
@@ -516,7 +624,7 @@ class LSMStore:
             task = self._plan_one()
             if task is None or not self._apply(task):
                 return None
-            self.stats.bg_compactions += 1
+            self._stats.local().bg_compactions += 1
             return task
         finally:
             if self.manifest.unpin(pinned.version_id):
@@ -540,7 +648,7 @@ class LSMStore:
         new_L, task, delayed = self.policy.plan(
             sizes, self._max_level, self.config.base_level_bytes)
         if delayed:
-            self.stats.delayed_last_level_compactions += delayed
+            self._stats.local().delayed_last_level_compactions += delayed
         self._max_level = max(self._max_level, new_L)
         if task is None:
             return None
@@ -574,10 +682,17 @@ class LSMStore:
         if not task.matches(srcs):
             return False
         dsts = levels[task.dst_level] if task.include_dst else []
+        st = self._stats.local()
+        tel = self.config.telemetry
+        t0 = tok = 0
+        if tel is not None:
+            t0 = time.perf_counter_ns()
+            tok = tel.emit("compaction_start", src=task.src_level,
+                           dst=task.dst_level, runs=len(srcs) + len(dsts))
         deepest = self._deepest_nonempty()
         drop_tombs = task.include_dst and task.dst_level >= deepest
         merged = merge_runs(srcs + dsts, self._bits_for_level(task.dst_level),
-                            self.stats, drop_tombstones=drop_tombs,
+                            st, drop_tombstones=drop_tombs,
                             block_size=self.config.block_size,
                             key_bytes=self.config.key_bytes,
                             pair_merge=self._pair_merge_fn(),
@@ -590,6 +705,12 @@ class LSMStore:
         self._levels = levels
         self._max_level = max(self._max_level, task.dst_level)
         self._commit()
+        if tel is not None:
+            dur = time.perf_counter_ns() - t0
+            tel.record("compaction", dur)
+            tel.emit("compaction_end", token=tok, src=task.src_level,
+                     dst=task.dst_level, entries=len(merged),
+                     t0=t0, dur_ns=dur)
         return True
 
     def _deepest_nonempty(self) -> int:
@@ -601,8 +722,9 @@ class LSMStore:
         return deepest
 
     def _commit(self):
-        self.manifest.commit(self._levels, self._max_level, self._seq, self.stats)
-        self.manifest.fsync(self.stats)
+        st = self._stats.local()
+        self.manifest.commit(self._levels, self._max_level, self._seq, st)
+        self.manifest.fsync(st)
         with self._maint_lock:
             # The gc + retain + repin triplet must not interleave with a
             # concurrent snapshot release (or another install): a retain
@@ -695,12 +817,18 @@ class LSMStore:
         if v is not None and v.levels_ref is levels:
             return v
         t0 = time.perf_counter_ns()
-        view = build_range_view(levels, self._view_cache)
-        self.stats.view_rebuilds += 1
+        view = build_range_view(levels, self._view_cache,
+                                telemetry=self.config.telemetry)
+        dt = time.perf_counter_ns() - t0
+        st = self._stats.local()
+        st.view_rebuilds += 1
         if background:
-            self.stats.bg_view_rebuilds += 1
-        self.stats.view_entries_built += len(view)
-        self.stats.view_rebuild_ns += time.perf_counter_ns() - t0
+            st.bg_view_rebuilds += 1
+        st.view_entries_built += len(view)
+        st.view_rebuild_ns += dt
+        tel = self.config.telemetry
+        if tel is not None:
+            tel.record("view_rebuild", dt)
         self._range_view = view
         return view
 
@@ -716,7 +844,19 @@ class LSMStore:
         self.refresh_range_view(background=True)
 
     def get(self, key: int, snapshot: Optional[Version] = None) -> Optional[bytes]:
-        self.stats.point_reads += 1
+        tel = self.config.telemetry
+        if tel is None:
+            return self._get_impl(key, snapshot)
+        t0 = time.perf_counter_ns()
+        out = self._get_impl(key, snapshot)
+        # thread-local histogram record: no locks on the lock-free read path
+        tel.record("get", time.perf_counter_ns() - t0)
+        return out
+
+    def _get_impl(self, key: int, snapshot: Optional[Version] = None
+                  ) -> Optional[bytes]:
+        st = self._stats.local()
+        st.point_reads += 1
         if snapshot is None:
             # active captured BEFORE the imm check (the rotation publish
             # order makes this safe — see _mem_sources); the empty-queue
@@ -735,8 +875,8 @@ class LSMStore:
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if len(run) == 0:
                 continue
-            self.stats.runs_touched_point += 1
-            found, value, _ = run.point_get(int(key), self.stats, use_bloom,
+            st.runs_touched_point += 1
+            found, value, _ = run.point_get(int(key), st, use_bloom,
                                             cache=self.block_cache)
             if found:
                 return value
@@ -806,9 +946,21 @@ class LSMStore:
         over the run's fence-pointed key array.  Aggregate IOStats accounting
         is identical to the equivalent sequence of scalar ``get`` calls.
         """
+        tel = self.config.telemetry
+        if tel is None:
+            return self._multi_get_impl(keys, snapshot)
+        t0 = time.perf_counter_ns()
+        out = self._multi_get_impl(keys, snapshot)
+        tel.record("multi_get", time.perf_counter_ns() - t0)
+        return out
+
+    def _multi_get_impl(self, keys: Sequence[int],
+                        snapshot: Optional[Version] = None
+                        ) -> List[Optional[bytes]]:
+        st = self._stats.local()
         keys_arr = np.asarray(list(keys), dtype=KEY_DTYPE)
         n = int(keys_arr.size)
-        self.stats.point_reads += n
+        st.point_reads += n
         results: List[Optional[bytes]] = [None] * n
         if n == 0:
             return results
@@ -832,9 +984,9 @@ class LSMStore:
                 break
             if len(run) == 0:
                 continue
-            self.stats.runs_touched_point += int(pending.size)
+            st.runs_touched_point += int(pending.size)
             found, values = run.point_get_batch(
-                keys_arr[pending], self.stats, use_bloom, probe_fn,
+                keys_arr[pending], st, use_bloom, probe_fn,
                 cache=self.block_cache)
             if found.any():
                 for p in np.nonzero(found)[0]:
@@ -853,7 +1005,18 @@ class LSMStore:
         tombstone flushes.  In async mode that transition happens on the
         background worker's schedule rather than at an explicit ``flush``
         call; use ``scan``/``iterator`` where exact liveness matters."""
-        self.stats.range_reads += 1
+        tel = self.config.telemetry
+        if tel is None:
+            return self._seek_impl(key, snapshot)
+        t0 = time.perf_counter_ns()
+        out = self._seek_impl(key, snapshot)
+        tel.record("seek", time.perf_counter_ns() - t0)
+        return out
+
+    def _seek_impl(self, key: int, snapshot: Optional[Version] = None
+                   ) -> Optional[int]:
+        st = self._stats.local()
+        st.range_reads += 1
         best: Optional[int] = None
         # memtables BEFORE levels: the install protocol publishes the L0 run
         # first and pops the immutable memtable second, so this capture order
@@ -864,23 +1027,23 @@ class LSMStore:
             if view is None and self._scheduler is None:
                 view = self.refresh_range_view()
             if view is not None:
-                self.stats.view_scans += 1
-                best = view.seek(int(key), self.stats, self.block_cache)
+                st.view_scans += 1
+                best = view.seek(int(key), st, self.block_cache)
                 # same approximate-liveness memtable probe as the run walk
                 for mt in mems:
                     for k, s, v in mt.scan(int(key))[:1]:
                         if v is not None and (best is None or k < best):
                             best = k
                 return best
-            self.stats.view_fallbacks += 1
+            st.view_fallbacks += 1
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if len(run) == 0:
                 continue
-            self.stats.runs_touched_range += 1
-            self.stats.seeks += 1
+            st.runs_touched_range += 1
+            st.seeks += 1
             i = run.seek_idx(int(key))
             if i < len(run):
-                run._charge_block(run.block_of[i], self.stats,
+                run._charge_block(run.block_of[i], st,
                                   self.block_cache)
                 k = int(run.keys[i])
                 if best is None or k < best:
@@ -906,7 +1069,8 @@ class LSMStore:
         mems = self._mem_sources() if snapshot is None else None
         levels = self._read_state(snapshot)
         runs = [r for r in self._runs_newest_first(levels) if len(r)]
-        return MergingIterator(runs, memtables=mems, stats=self.stats,
+        return MergingIterator(runs, memtables=mems,
+                               stats=self._stats.local(),
                                chunk=chunk, cache=self.block_cache)
 
     def scan(self, start_key: int, count: int,
@@ -924,7 +1088,19 @@ class LSMStore:
         merging iterator and counts ``view_fallbacks`` — the result is
         identical either way, only the cost differs.
         """
-        self.stats.range_reads += 1
+        tel = self.config.telemetry
+        if tel is None:
+            return self._scan_impl(start_key, count, snapshot)
+        t0 = time.perf_counter_ns()
+        out = self._scan_impl(start_key, count, snapshot)
+        tel.record("scan", time.perf_counter_ns() - t0)
+        return out
+
+    def _scan_impl(self, start_key: int, count: int,
+                   snapshot: Optional[Version] = None
+                   ) -> List[Tuple[int, bytes]]:
+        st = self._stats.local()
+        st.range_reads += 1
         if snapshot is None and self.config.use_range_views:
             # memtables BEFORE the view/levels capture (see seek): a racing
             # install contributes a benign duplicate, never a lost read
@@ -933,13 +1109,13 @@ class LSMStore:
             if view is None and self._scheduler is None:
                 view = self.refresh_range_view()  # lazy in sync mode
             if view is not None:
-                self.stats.view_scans += 1
+                st.view_scans += 1
                 mems = [m for m in mems if len(m)]   # empty => pure sweep
                 mem_items = (combined_mem_items(mems, int(start_key))
                              if mems else [])
                 return view.scan(int(start_key), count, mem_items,
-                                 self.stats, self.block_cache)
-            self.stats.view_fallbacks += 1
+                                 st, self.block_cache)
+            st.view_fallbacks += 1
         it = self.iterator(snapshot)
         return it.scan(int(start_key), count)
 
@@ -953,7 +1129,8 @@ class LSMStore:
         python lists, and retries with a 4x larger window when a truncated
         run could still hide smaller keys.
         """
-        self.stats.range_reads += 1
+        st = self._stats.local()
+        st.range_reads += 1
         # memtables BEFORE levels (see seek): a flush racing this capture
         # contributes a duplicate (same seq, same value — the (key, -seq)
         # merge keeps one), never a lost read
@@ -994,8 +1171,8 @@ class LSMStore:
                 # an iterator that would have kept reading anyway).
                 end_key = live[-1][0] if live else None
                 for run, i in zip(runs, seek_positions):
-                    self.stats.runs_touched_range += 1
-                    self.stats.seeks += 1
+                    st.runs_touched_range += 1
+                    st.seeks += 1
                     if i >= len(run):
                         continue
                     if end_key is None:
@@ -1004,7 +1181,7 @@ class LSMStore:
                         consumed_end = int(np.searchsorted(
                             run.keys, np.uint64(end_key), side="right"))
                         consumed_end = max(consumed_end, i + 1)
-                    self.stats.blocks_read += run.blocks_spanned(i, consumed_end)
+                    st.blocks_read += run.blocks_spanned(i, consumed_end)
                 return live
             per_run_take *= 4
 
@@ -1095,7 +1272,8 @@ class LSMStore:
             # while the unpinned cache refills on demand.
             self.block_cache.clear()
             with self._maint_lock:
-                self.pinned_l0.repin(self._levels[0], stats=self.stats)
+                self.pinned_l0.repin(self._levels[0],
+                                     stats=self._stats.local())
         # Post-crash every surviving WAL byte is durable (crash truncated
         # each segment to its watermark), so consolidation + replay rebuilds
         # the memtable and advances _seq; with an empty immutable queue this

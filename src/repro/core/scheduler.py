@@ -225,6 +225,10 @@ class CompactionScheduler:
                             if not self._abort:
                                 cont = job.run(store)
             except BaseException as e:    # worker must survive a failed job:
+                tel = store.config.telemetry if store is not None else None
+                if tel is not None:
+                    tel.emit("bg_failure", job=type(job).__name__,
+                             error=repr(e))
                 with self._cv:            # a dead consumer would deadlock
                     if self._failure is None:   # writers at the stall trigger
                         self._failure = e
@@ -312,6 +316,10 @@ class CompactionScheduler:
         dropped un-run.  Returns with the scheduler idle and reusable —
         ``recover()`` just starts submitting again.
         """
+        store = self._store()
+        tel = store.config.telemetry if store is not None else None
+        if tel is not None:
+            tel.emit("bg_abort", dropped=len(self._queue))
         with self._cv:
             self._abort = True
             self._queue.clear()

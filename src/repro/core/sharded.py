@@ -154,6 +154,7 @@ class ShardedLSMStore:
         cfg = self.config
         n = len(self.shards)
         self.block_cache = BlockCache(cfg.cache_bytes, cfg.cache_policy)
+        self.block_cache.telemetry = cfg.telemetry
         per_cache = cfg.cache_bytes // n
         per_pin = cfg.pin_l0_bytes // n
         for i, s in enumerate(self.shards):
@@ -341,6 +342,9 @@ class ShardedLSMStore:
                 if all(p.version_id == s.manifest.current().version_id
                        for s, p in zip(self.shards, pins)):
                     return ShardedSnapshot(pins)
+                tel = self.config.telemetry
+                if tel is not None:
+                    tel.emit("snapshot_retry", shards=len(self.shards))
                 for s, p in zip(self.shards, pins):
                     s.release_snapshot(p)
 
@@ -390,6 +394,12 @@ class ShardedLSMStore:
         """Aggregated counters across shards (a fresh fieldwise-summed
         ``IOStats`` — use ``snapshot()``/``delta()`` on it as usual)."""
         return IOStats.merge(s.stats for s in self.shards)
+
+    @property
+    def telemetry(self):
+        """The facade's (and, by live-config sharing, every shard's)
+        Telemetry — one object aggregates all shards' histograms/events."""
+        return self.config.telemetry
 
     @property
     def num_levels_in_use(self) -> int:

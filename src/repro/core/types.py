@@ -10,7 +10,8 @@ complexity table (Table 2) exactly.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional
+import threading
+from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
@@ -104,6 +105,57 @@ class IOStats:
         for s in stats:
             out = out + s
         return out
+
+    def to_dict(self) -> "Dict[str, float]":
+        """Counters as a dict in declaration order (the stable key order the
+        CSV/JSON surfaces rely on), plus the derived ``write_amp`` — the one
+        dump used by ``AutumnKVCache.stats()`` and the benchmarks instead of
+        ad-hoc field reaching."""
+        out = {f.name: getattr(self, f.name)
+               for f in dataclasses.fields(IOStats)}
+        out["write_amp"] = self.write_amplification()
+        return out
+
+
+class StatsHub:
+    """Lossless concurrent :class:`IOStats` accumulation.
+
+    Scheduler workers and foreground threads used to ``+=`` the *same*
+    ``IOStats`` fields — a non-atomic read-modify-write that silently lost
+    increments under contention (e.g. ``stall_ns`` charged by a stalled
+    writer while a worker merged compaction counters).  The hub gives every
+    thread its own private ``IOStats`` shard via :meth:`local`; shards are
+    registered with a GIL-atomic ``list.append`` so neither registration nor
+    the hot ``+=`` on a shard ever takes a lock, and no two threads ever
+    mutate the same field.  :meth:`merged` folds the shards together at read
+    time with the fieldwise ``IOStats.__add__`` algebra.
+
+    Reads are monotonic-consistent (a concurrent snapshot may split an
+    in-flight operation's counters across fields — the exact guarantee the
+    single shared IOStats gave, minus the lost updates).  Shards of finished
+    threads stay registered so their counts are never dropped; the engine
+    uses a bounded worker pool, so the shard list stays small.
+    """
+
+    __slots__ = ("_tl", "_shards")
+
+    def __init__(self):
+        self._tl = threading.local()
+        self._shards: List[IOStats] = []
+
+    def local(self) -> IOStats:
+        """The calling thread's private shard (create+register on first use)."""
+        try:
+            return self._tl.s
+        except AttributeError:
+            s = IOStats()
+            self._tl.s = s
+            self._shards.append(s)   # list.append is GIL-atomic: no lock
+            return s
+
+    def merged(self) -> IOStats:
+        """Fieldwise sum of all shards (a fresh IOStats; shards unmutated)."""
+        return IOStats.merge(list(self._shards))
 
 
 def entry_bytes(val_len: int, key_bytes: int = KEY_BYTES) -> int:

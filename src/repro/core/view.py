@@ -37,6 +37,7 @@ held alive by the view itself, so a racing install can never tear a scan.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -77,15 +78,29 @@ def _level_columns(runs_newest_first: Sequence[SortedRun]) -> LevelColumns:
 
 def build_range_view(levels: Sequence[Sequence[SortedRun]],
                      level_cache: Optional[Dict[Tuple[int, ...],
-                                                LevelColumns]] = None
-                     ) -> "RangeView":
+                                                LevelColumns]] = None,
+                     telemetry=None) -> "RangeView":
     """Build the global view from a captured (copy-on-write) level list.
 
     ``level_cache`` maps a level's run-id tuple to its sorted columns;
     levels untouched since the last rebuild reuse their cached columns
     (the incremental half of the rebuild), and entries for retired run
     sets are pruned so the cache never roots dead runs.
+
+    ``telemetry`` (DESIGN.md §14): when set, every rebuild emits a
+    ``view_rebuild`` trace event carrying entry/run counts and the build
+    duration (the engine separately records the latency histogram).
     """
+    t0 = time.perf_counter_ns() if telemetry is not None else 0
+    view = _build_range_view(levels, level_cache)
+    if telemetry is not None:
+        dur = time.perf_counter_ns() - t0
+        telemetry.emit("view_rebuild", entries=len(view),
+                       runs=len(view.runs), t0=t0, dur_ns=dur)
+    return view
+
+
+def _build_range_view(levels, level_cache):
     runs: List[SortedRun] = []
     parts_k: List[np.ndarray] = []
     parts_src: List[np.ndarray] = []

@@ -246,12 +246,19 @@ class AutumnKVCache:
         self.db.flush()
 
     def stats(self) -> Dict[str, Any]:
-        return dict(hits=self.hits, misses=self.misses,
-                    pages_written=self.pages_written,
-                    pages_deduped=self.pages_deduped,
-                    levels=self.db.num_levels_in_use,
-                    block_cache=self.db.cache_summary(),
-                    io=dataclass_asdict(self.db.stats))
+        out = dict(hits=self.hits, misses=self.misses,
+                   pages_written=self.pages_written,
+                   pages_deduped=self.pages_deduped,
+                   levels=self.db.num_levels_in_use,
+                   block_cache=self.db.cache_summary(),
+                   io=self.db.stats.to_dict())
+        tel = self.db.telemetry
+        if tel is not None:
+            # per-op-class latency summaries + trace health (DESIGN.md §14);
+            # attach a Telemetry via lsm_config=LSMConfig(..., telemetry=...)
+            out["latency"] = tel.summary()
+            out["trace_events"] = len(tel.trace)
+        return out
 
     def close(self) -> None:
         """Drain and stop the store's background compaction workers.
@@ -261,8 +268,3 @@ class AutumnKVCache:
         parked worker thread behind.
         """
         self.db.close()
-
-
-def dataclass_asdict(d) -> Dict[str, Any]:
-    import dataclasses as dc
-    return {f.name: getattr(d, f.name) for f in dc.fields(d)}

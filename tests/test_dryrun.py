@@ -18,7 +18,12 @@ def run_sub(code: str) -> str:
     return subprocess.check_output(
         [sys.executable, "-c", textwrap.dedent(code)],
         env={"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
-             "HOME": "/tmp"},
+             "HOME": "/tmp",
+             # the scrubbed env must still pin the platform: these tests
+             # only ever want forced host (CPU) devices, and letting jax
+             # probe an accelerator plugin hangs on TPU-less machines
+             # (libtpu polls for a device forever under its lockfile)
+             "JAX_PLATFORMS": "cpu"},
         stderr=subprocess.STDOUT, text=True, timeout=500)
 
 
