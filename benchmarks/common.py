@@ -22,7 +22,9 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             shards: int = 1,
             shard_key_space: Optional[int] = None,
             use_range_views: bool = False,
-            telemetry=None) -> LSMStore:
+            telemetry=None,
+            rebalance_interval_ops: int = 0,
+            rebalance_ratio: float = 2.0) -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
     container-scale datasets so the tree reaches realistic depths (L=4..9).
     ``cache_kb``/``pin_l0_kb`` enable the memory subsystem (DESIGN.md §9);
@@ -33,7 +35,9 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
     balance under the default full-uint64 splitters; ``telemetry`` attaches
     a ``repro.core.Telemetry`` facade (DESIGN.md §14) for latency
     histograms + event tracing (None keeps the zero-overhead disabled
-    path — the default for every existing lane)."""
+    path — the default for every existing lane);
+    ``rebalance_interval_ops``/``rebalance_ratio`` enable dynamic shard
+    rebalancing under skew (DESIGN.md §15; 0 keeps static splitters)."""
     splitters = None
     if shards > 1 and shard_key_space is not None:
         splitters = uniform_splitters(shards, shard_key_space)
@@ -51,7 +55,9 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
         shards=shards,
         shard_splitters=splitters,
         use_range_views=use_range_views,
-        telemetry=telemetry))
+        telemetry=telemetry,
+        rebalance_interval_ops=rebalance_interval_ops,
+        rebalance_ratio=rebalance_ratio))
 
 
 def tune_bulk_load(db, n: int, value_size: int) -> None:
@@ -230,6 +236,79 @@ class Zipfian:
     def sample(self, size: int) -> np.ndarray:
         u = self.rng.random(size)
         return np.searchsorted(self.cdf, u)
+
+
+class Hotspot:
+    """YCSB's hotspot generator over [0, n): ``hot_ops_frac`` of ops hit a
+    contiguous ``hot_frac`` slice of the keyspace (the classic skew that
+    piles every op into one range-partitioned shard)."""
+
+    def __init__(self, n: int, hot_frac: float = 0.1,
+                 hot_ops_frac: float = 0.9, seed: int = 7,
+                 hot_start: int = 0):
+        self.n = n
+        self.width = max(1, int(n * hot_frac))
+        self.hot_start = int(hot_start) % max(1, n - self.width + 1)
+        self.hot_ops_frac = hot_ops_frac
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, size: int) -> np.ndarray:
+        hot = self.rng.random(size) < self.hot_ops_frac
+        cold = self.rng.integers(0, self.n, size, dtype=np.uint64)
+        hotk = self.hot_start + self.rng.integers(0, self.width, size,
+                                                  dtype=np.uint64)
+        return np.where(hot, hotk, cold)
+
+
+class ShiftingHotspot:
+    """Hotspot whose hot range jumps to a new (seeded-pseudorandom)
+    location every ``period`` sampled ops — the adversarial case for
+    rebalancing: splitters tuned for the last phase are wrong for the
+    next."""
+
+    def __init__(self, n: int, hot_frac: float = 0.1,
+                 hot_ops_frac: float = 0.9, period: int = 20_000,
+                 seed: int = 7):
+        self.n = n
+        self.width = max(1, int(n * hot_frac))
+        self.hot_ops_frac = hot_ops_frac
+        self.period = max(1, period)
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self._i = 0            # sampled-op position drives the phase
+
+    def _hot_start(self, phase: int) -> int:
+        from repro.core.types import splitmix64
+        h = splitmix64(np.asarray([phase * 2654435761 + self.seed],
+                                  dtype=np.uint64))[0]
+        return int(h % max(1, self.n - self.width))
+
+    def sample(self, size: int) -> np.ndarray:
+        out = np.empty(size, dtype=np.uint64)
+        done = 0
+        while done < size:
+            phase = self._i // self.period
+            take = min(size - done, self.period - self._i % self.period)
+            hs = self._hot_start(phase)
+            hot = self.rng.random(take) < self.hot_ops_frac
+            cold = self.rng.integers(0, self.n, take, dtype=np.uint64)
+            hotk = hs + self.rng.integers(0, self.width, take,
+                                          dtype=np.uint64)
+            out[done:done + take] = np.where(hot, hotk, cold)
+            done += take
+            self._i += take
+        return out
+
+
+def shard_imbalance(counts) -> float:
+    """max/mean per-shard op share: 1.0 = perfectly balanced, N = all ops
+    in one of N shards.  The load metric the rebalance trigger uses and
+    the skew-gauntlet rows report."""
+    counts = [int(c) for c in counts]
+    tot = sum(counts)
+    if not counts or tot <= 0:
+        return 1.0
+    return max(counts) * len(counts) / tot
 
 
 def fnv_scramble(x: np.ndarray) -> np.ndarray:

@@ -42,7 +42,7 @@ from repro.core.run import levels_bit_equal
 from benchmarks.common import make_db, pct, stats_row
 
 OPS = ("get", "scan", "put")
-ATTRIB_KINDS = ("flush", "compaction", "stall", "view_rebuild")
+ATTRIB_KINDS = ("flush", "compaction", "stall", "view_rebuild", "rebalance")
 CSV_HEADER = "op,count,p50_us,p99_us,p999_us,max_us,tel_p99_us"
 
 
@@ -98,7 +98,12 @@ def run_serving(clients: int, seconds: float, n_preload: int,
                  cache_kb=1024, pin_l0_kb=256,
                  async_compaction=True, compaction_workers=2,
                  shards=2, shard_key_space=key_space,
-                 use_range_views=True, telemetry=telemetry)
+                 use_range_views=True, telemetry=telemetry,
+                 # rebalancing armed (DESIGN.md §15): the uniform client
+                 # keys stay under the trigger, but a skewed tenant would
+                 # migrate mid-serving and its window lands in the trace —
+                 # tail attribution can then blame "rebalance"
+                 rebalance_interval_ops=25_000, rebalance_ratio=1.5)
     rng = np.random.default_rng(11)
     keys = rng.integers(0, key_space, n_preload, dtype=np.uint64)
     val = bytes(value_size)
@@ -143,7 +148,8 @@ def _event_intervals(trace) -> Dict[str, List[Tuple[int, int]]]:
     (grouped as "stall"), view_rebuild."""
     kind_map = {"flush_end": "flush", "compaction_end": "compaction",
                 "stall_exit": "stall", "slowdown": "stall",
-                "view_rebuild": "view_rebuild"}
+                "view_rebuild": "view_rebuild",
+                "rebalance_end": "rebalance"}
     raw: Dict[str, List[Tuple[int, int]]] = {k: [] for k in ATTRIB_KINDS}
     for e in trace.dump():
         kind = kind_map.get(e.kind)
@@ -293,6 +299,14 @@ def main(clients: int = 4, seconds: float = 4.0, n_preload: int = 40_000,
     print("trace_events," + ",".join(f"{k}={v}"
                                      for k, v in sorted(ev_counts.items())))
 
+    # per-shard op skew the serving window actually saw (max/mean share;
+    # 1.0 = balanced) — the signal the §15 rebalance trigger watches
+    from benchmarks.common import shard_imbalance
+    imb = (shard_imbalance(db.shard_load_ops())
+           if hasattr(db, "shard_load_ops") else 1.0)
+    print(f"shard_imbalance,{imb:.3f},rebalances="
+          f"{getattr(db, 'rebalances', 0)}")
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(dict(rows=rows, attribution=attrib,
@@ -317,6 +331,7 @@ def main(clients: int = 4, seconds: float = 4.0, n_preload: int = 40_000,
             assert row["tail_samples"] > 0
         # flushes must have happened under churn (the trace saw the engine)
         assert ev_counts.get("flush_end", 0) > 0, "no flush events traced"
+        assert imb >= 1.0, "shard_imbalance must be >= 1.0 by construction"
         # disabled-mode overhead within noise: generous CI bound (container
         # timers are coarse); the measured figure goes in DESIGN.md §14
         assert overhead < 30.0, f"telemetry-off overhead {overhead:.1f}%"

@@ -137,6 +137,19 @@ class LSMConfig:
                                         # facade hands its live config to
                                         # every shard, so one Telemetry
                                         # aggregates across shards for free.
+    rebalance_interval_ops: int = 0     # sharded facade only (DESIGN.md §15):
+                                        # re-check per-shard load imbalance
+                                        # every N routed ops (and at
+                                        # scheduler-idle boundaries).  0
+                                        # (default) disables rebalancing —
+                                        # static splitters, bit-for-bit the
+                                        # PR-5 behavior.  Plain LSMStore
+                                        # ignores this field.
+    rebalance_ratio: float = 2.0        # imbalance trigger: rebalance when
+                                        # max/mean per-shard op share over
+                                        # the current window exceeds this
+                                        # (1.0 = perfectly balanced, N =
+                                        # fully skewed into one shard)
 
 
 class LSMStore:
@@ -1279,6 +1292,113 @@ class LSMStore:
         # the memtable and advances _seq; with an empty immutable queue this
         # is exactly the old single-WAL replay.
         self._consolidate_imm_wal()
+
+    # ------------------------------------- cross-shard migration (§15)
+    # Three primitives used by ShardedLSMStore rebalancing.  All of them
+    # assume the caller holds the facade write gate and has quiesced this
+    # store (no foreground writers, scheduler drained) — except
+    # strip_to_range, which recovery also calls with a replayed (in-range
+    # by invariant) memtable.
+
+    def export_range(self, lo: int, hi: int):
+        """Columns of every stored entry with ``lo <= key < hi``.
+
+        Returns ``(keys, seqs, vlens, vals)`` with duplicates *retained*
+        (one row per surviving physical entry, any level) so the importer's
+        ``build_run`` dedup keeps exactly the newest version per key, or
+        ``None`` when the range holds nothing.  Requires an empty memtable
+        (the facade flushes before migrating) so runs are the whole store.
+        """
+        assert len(self.memtable) == 0 and not self._imm, \
+            "export_range requires a flushed, quiesced store"
+        lo64 = np.uint64(lo)
+        ks, ss, ls, vs, vmax = [], [], [], [], 0
+        for run in self._runs_newest_first(self._levels):
+            if len(run) == 0:
+                continue
+            i0 = int(np.searchsorted(run.keys, lo64, side="left"))
+            i1 = (len(run) if hi >= 1 << 64 else
+                  int(np.searchsorted(run.keys, np.uint64(hi), side="left")))
+            if i0 >= i1:
+                continue
+            k, s, l, v = run.slice_from(i0, i1 - i0)
+            v2 = v if v.ndim == 2 else v.reshape(len(k), 0)
+            ks.append(k); ss.append(s); ls.append(l); vs.append(v2)
+            vmax = max(vmax, v2.shape[1])
+        if not ks:
+            return None
+        vs = [v if v.shape[1] == vmax
+              else np.pad(v, ((0, 0), (0, vmax - v.shape[1])))
+              for v in vs]
+        return (np.concatenate(ks), np.concatenate(ss),
+                np.concatenate(ls), np.concatenate(vs))
+
+    def import_migrated_run(self, run: SortedRun) -> None:
+        """Install a migrated run as newest-L0 and commit it durably.
+
+        The facade guarantees the run's key range is disjoint from
+        everything this store currently holds (it is becoming the owner),
+        so L0 placement cannot shadow or be shadowed incorrectly; the seq
+        max-bump keeps every *future* local write newer than the imports.
+        """
+        if len(run) == 0:
+            return
+        self._seq = max(self._seq, int(run.seqs.max()))
+        levels = [list(lvl) for lvl in self._levels]
+        levels[0].append(run)          # newest-last, like flush
+        self._levels = levels          # COW publish
+        st = self._stats.local()
+        st.blocks_written += -(-run.data_bytes // self.config.block_size)
+        self._commit()
+
+    def strip_to_range(self, lo: int, hi: int) -> int:
+        """Drop every stored entry outside ``[lo, hi)``; return the count.
+
+        Runs wholly outside are dropped; straddling runs are rebuilt from
+        their in-range slice (already unique+sorted).  Commits only when
+        something changed, so post-recovery clipping of an untouched store
+        is a no-op.  The memtable is left alone: the facade only writes
+        in-range keys under the routing that is durably logged *before* it
+        becomes visible, so replayed memtable contents are in-range by
+        invariant.
+        """
+        lo64 = np.uint64(lo)
+        dropped = 0
+        changed = False
+        levels: List[List[SortedRun]] = []
+        for li, lvl in enumerate(self._levels):
+            out = []
+            for run in lvl:
+                if len(run) == 0:
+                    out.append(run)
+                    continue
+                i0 = int(np.searchsorted(run.keys, lo64, side="left"))
+                i1 = (len(run) if hi >= 1 << 64 else
+                      int(np.searchsorted(run.keys, np.uint64(hi),
+                                          side="left")))
+                if i0 == 0 and i1 == len(run):
+                    out.append(run)
+                    continue
+                changed = True
+                dropped += len(run) - (i1 - i0)
+                if i0 >= i1:
+                    continue                      # wholly outside: drop
+                k, s, l, v = run.slice_from(i0, i1 - i0)
+                st = self._stats.local()
+                nr = build_run(k, s, l, v,
+                               bits_per_key=self._bits_for_level(li),
+                               assume_unique_sorted=True,
+                               block_size=self.config.block_size,
+                               key_bytes=self.config.key_bytes,
+                               hash_fn=self._bloom_hash_fn())
+                st.blocks_written += -(-nr.data_bytes
+                                       // self.config.block_size)
+                out.append(nr)
+            levels.append(out)
+        if changed:
+            self._levels = levels          # COW publish: stale range views
+            self._commit()                 # self-invalidate on levels_ref
+        return dropped
 
     # ---------------------------------------------------------------- info
     def cache_summary(self) -> dict:

@@ -163,6 +163,14 @@ class CompactionScheduler:
         self._abort = False
         self._stop = False
         self._failure: Optional[BaseException] = None
+        # Optional facade hook (DESIGN.md §15): called by the worker that
+        # just drained the queue (outside the condition lock).  The sharded
+        # facade points this at its imbalance check so rebalancing is
+        # *detected* at compaction/quiesce boundaries; the hook must only
+        # set flags — the actual rebalance runs on a foreground thread
+        # (running it here would deadlock: a rebalance quiesces this very
+        # scheduler from its only worker).
+        self.on_idle: Optional[Callable[[], None]] = None
         self._threads = []
         for i in range(self.workers):
             t = threading.Thread(target=self._loop, daemon=True,
@@ -241,7 +249,14 @@ class CompactionScheduler:
                     if cont is not None and not self._abort \
                             and self._failure is None:
                         self._queue.appendleft(cont)
+                    drained = not self._queue and self._inflight == 0
                     self._cv.notify_all()
+                hook = self.on_idle
+                if drained and hook is not None and not self._abort:
+                    try:
+                        hook()     # flag-setting only; outside the condition
+                    except Exception:
+                        pass       # a broken hook must not kill the worker
 
     # ------------------------------------------------------------- lifecycle
     @property

@@ -20,6 +20,24 @@ space into N fully independent trees:
     shard i's keys all precede shard i+1's, so a range read is a
     shard-ordered concatenation, not a merge.
 
+Dynamic rebalancing (DESIGN.md §15)
+    Static splitters collapse under skew: a hotspot piles every op into one
+    shard while its siblings idle.  With ``rebalance_interval_ops > 0`` the
+    facade tracks per-shard routed ops in a decaying window, detects
+    imbalance (max/mean share ≥ ``rebalance_ratio``) at write and
+    compaction/quiesce boundaries, and re-derives the splitters as
+    load-weighted key quantiles over the shards' own runs — splitting hot
+    shards and merging cold neighbours in one step.  Data moves by
+    **cross-shard run migration**: quiesce, export each shard's
+    leaving-range slice, rebuild it as L0 runs in the destination (durably
+    committed), log + publish the new routing, then strip each source to
+    its new range.  Readers never block: routing lives in one immutable
+    ``_Routing`` object swapped by reference; a reader captures it,
+    computes, and retries iff the reference moved mid-read (seqlock
+    flavor).  Snapshots carry the routing they were taken under, and their
+    manifest pins keep pre-migration runs alive, so snapshot reads are
+    never retried and survive any number of rebalances.
+
 Shared memory subsystem
     All shards share one budgeted :class:`BlockCache`: each shard reads
     through a namespaced ``BlockCacheView`` with a ``cache_bytes / N`` slice
@@ -27,7 +45,12 @@ Shared memory subsystem
     a ``pin_l0_bytes / N`` DRAM-resident L0 slice.  Cache keys are
     namespaced by shard id and ``retain``/repin/clear are namespace-scoped,
     so one shard's post-commit invalidation can never evict (or alias) a
-    sibling's live blocks.
+    sibling's live blocks.  A rebalance re-slices the per-namespace budgets
+    load-proportionally (with a 1/(4N) floor), so a merged cold shard hands
+    its idle cache back to the hot half of the keyspace; namespaces are
+    never renumbered — migrated runs get fresh run-ids in the destination's
+    storage, so their blocks key under the destination's namespace and the
+    source's strip-commit ``retain`` drops the dead ones.
 
 Differential contract
     The plain single store (or ``shards=1``) is the retained oracle: for any
@@ -38,22 +61,26 @@ Differential contract
     With ``shards>1`` the per-shard trees are smaller — sequence numbers are
     per-shard and levels are shallower (that depth reduction, plus parallel
     background work, is the speedup) — so cross-shard equality is defined on
-    read *results*, not run bytes.
+    read *results*, not run bytes.  Rebalancing preserves it: a migrated
+    key's entire version history lives in exactly one shard before and
+    after the move (imports are deduped newest-wins from the quiesced
+    source; the destination owned nothing in the moved range, so dropping
+    collapsed tombstones loses nothing live).
 
 Concurrency
     The facade inherits the engine's single-writer/multi-reader discipline:
     one foreground thread writes (each shard still sees a single writer);
-    readers are lock-free per shard.  Snapshots pin every shard's current
-    version in shard order (each pin is atomic per shard via the manifest
-    mutex); with the single writer idle, the pinned tuple is exactly the
-    acked state.
+    readers are lock-free per shard.  Rebalancing runs on a foreground
+    thread under the write gate — never on a scheduler worker, whose
+    ``on_idle`` hook only *flags* imbalance (running it there would
+    deadlock: the migration quiesces that very scheduler).
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from bisect import bisect_right
+from bisect import bisect_left, bisect_right
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -61,7 +88,12 @@ import numpy as np
 from .cache import BlockCache, BlockCacheView
 from .engine import LSMConfig, LSMStore
 from .manifest import Version
+from .run import build_run
+from .scheduler import CompactJob
 from .types import KEY_DTYPE, IOStats
+
+_KEY_SPACE_END = 1 << 64
+_HIST_B = 32                 # buckets per shard in the load histogram (§15)
 
 
 def uniform_splitters(shards: int, key_space: int = 1 << 64
@@ -75,10 +107,47 @@ def uniform_splitters(shards: int, key_space: int = 1 << 64
     return tuple(key_space * (i + 1) // shards for i in range(shards - 1))
 
 
+class _Routing:
+    """One immutable routing epoch: the splitters plus their derived forms.
+
+    Readers capture a single reference, compute against it, then validate
+    ``facade._routing is r`` — a mid-read migration swaps the reference
+    (always to a fresh object), so a torn read (source already stripped /
+    destination not yet routed) is detected and retried.  The writer swaps
+    it only under the facade write gate, *after* durably logging the new
+    splitters, which is what makes crash recovery unambiguous.
+    """
+
+    __slots__ = ("lst", "arr", "epoch", "n")
+
+    def __init__(self, splitters: Sequence[int], epoch: int = 0):
+        self.lst = [int(x) for x in splitters]
+        self.arr = np.asarray(self.lst, dtype=KEY_DTYPE)
+        self.epoch = int(epoch)
+        self.n = len(self.lst) + 1
+
+    def shard_of(self, key: int) -> int:
+        return bisect_right(self.lst, int(key))
+
+    def split(self, keys_arr: np.ndarray) -> np.ndarray:
+        """Vectorized shard assignment: one searchsorted for the batch."""
+        return np.searchsorted(self.arr, keys_arr, side="right")
+
+    def bounds(self, si: int) -> Tuple[int, int]:
+        """Shard ``si``'s owned key range ``[lo, hi)`` (hi may be 2**64)."""
+        lo = self.lst[si - 1] if si > 0 else 0
+        hi = self.lst[si] if si < self.n - 1 else _KEY_SPACE_END
+        return lo, hi
+
+
 @dataclasses.dataclass(frozen=True)
 class ShardedSnapshot:
-    """One pinned :class:`Version` per shard, in shard order."""
+    """One pinned :class:`Version` per shard, in shard order, plus the
+    routing epoch the pins were taken under — snapshot reads route with
+    *their* splitters, and the pins keep pre-migration runs alive, so a
+    snapshot survives any number of rebalances unchanged."""
     versions: Tuple[Version, ...]
+    routing: Optional[_Routing] = None
 
 
 class ShardedLSMStore:
@@ -87,10 +156,10 @@ class ShardedLSMStore:
     Construct via :func:`make_store` (returns a plain :class:`LSMStore`
     when ``config.shards <= 1``).  All shards share the facade's *live*
     ``LSMConfig`` object, so runtime toggles (``use_pallas_bloom``,
-    ``slowdown_trigger``/``stall_trigger``) keep reaching every shard with
-    no per-shard plumbing; construction-time fields that must differ per
-    shard (cache/pin budgets, worker counts) are overridden before the
-    shared object is installed.
+    ``slowdown_trigger``/``stall_trigger``, the rebalance knobs) keep
+    reaching every shard with no per-shard plumbing; construction-time
+    fields that must differ per shard (cache/pin budgets, worker counts)
+    are overridden before the shared object is installed.
     """
 
     def __init__(self, config: Optional[LSMConfig] = None):
@@ -105,8 +174,13 @@ class ShardedLSMStore:
                 f"need {n - 1} splitters for {n} shards, got {len(splitters)}")
         if splitters != sorted(set(splitters)):
             raise ValueError("splitters must be strictly ascending")
-        self._splitters = np.asarray(splitters, dtype=KEY_DTYPE)
-        self._splitters_list = splitters
+        # Routing epoch 0 + its durable log.  The log mirrors the WAL's
+        # fsync discipline except routing commits sync immediately (they
+        # are rare); crash() truncates to the synced watermark and
+        # recover() restores the last durable epoch.
+        self._routing = _Routing(splitters, epoch=0)
+        self._routing_log: List[Tuple[int, ...]] = [tuple(splitters)]
+        self._routing_synced = 1
         # Shared worker budget: at most `compaction_workers` background jobs
         # in flight across ALL shards (each shard still runs its own
         # one-job-at-a-time determinism turnstile).
@@ -123,30 +197,95 @@ class ShardedLSMStore:
                      scheduler_budget=self._budget, scheduler_offset=i)
             for i in range(n)]
         # Facade write gate: serializes snapshot acquisition against
-        # facade-level writes (put/delete/batch/flush).  Without it a
-        # ``get_snapshot`` racing a cross-shard ``write_batch`` can pin
-        # shard 0 before the batch and shard 1 after it — a *torn* snapshot
-        # that no single-store snapshot could ever expose.  RLock because
-        # the batch entry points nest (``put_batch`` -> ``write_batch``).
-        # The single-writer discipline makes the gate uncontended in every
-        # existing workload; only a concurrent snapshot taker ever waits.
+        # facade-level writes (put/delete/batch/flush) AND rebalancing.
+        # Without it a ``get_snapshot`` racing a cross-shard ``write_batch``
+        # can pin shard 0 before the batch and shard 1 after it — a *torn*
+        # snapshot that no single-store snapshot could ever expose.  RLock
+        # because the batch entry points nest (``put_batch`` ->
+        # ``write_batch``).  The single-writer discipline makes the gate
+        # uncontended in every existing workload; only a concurrent
+        # snapshot taker (or a rebalance) ever waits.
         self._write_gate = threading.RLock()
-        for s in self.shards:
+        # Per-shard load accounting (DESIGN.md §15).  _load is the decaying
+        # trigger window (reset on rebalance, halved on each non-triggering
+        # check so stale skew ages out); _load_total is cumulative for
+        # reporting.  Plain-int bumps: racy under concurrent readers,
+        # intentionally — load is a heuristic and the lock-free read path
+        # must never take a lock.
+        self._load = [0] * n
+        self._load_total = [0] * n
+        # Per-shard key-space histogram over the same decaying window: 32
+        # buckets spanning the shard's current range.  This is the "cheap
+        # per-shard load summary" that lets _derive_splitters cut at the
+        # *measured* within-shard distribution — without it the derivation
+        # assumes even spread and chases a concentrated hot range through
+        # several geometric half-step migrations instead of one.  Reset
+        # whenever the routing (and so the bucket geometry) changes.
+        self._load_hist = [np.zeros(_HIST_B) for _ in range(n)]
+        self._ops_since_check = 0
+        self._rebalance_needed = False
+        self._in_rebalance = False
+        self.rebalances = 0          # completed rebalance count
+        self.migrated_entries = 0    # physical entries moved across shards
+        for si, s in enumerate(self.shards):
             # Live-config sharing: runtime toggles on the facade's config
             # reach every shard.  Construction-only fields (memtable size,
             # worker count, cache budgets) were already consumed above.
             s.config = self.config
+            if s._scheduler is not None:
+                # imbalance detection at compaction/quiesce boundaries:
+                # the drained-queue hook only sets a flag (see _on_shard_idle)
+                s._scheduler.on_idle = self._on_shard_idle
         self.block_cache: Optional[BlockCache] = None
         if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
             self._build_shared_cache()
 
     # ------------------------------------------------------------ partition
+    @property
+    def _splitters(self) -> np.ndarray:
+        return self._routing.arr
+
+    @property
+    def _splitters_list(self) -> List[int]:
+        return self._routing.lst
+
+    @property
+    def splitters(self) -> Tuple[int, ...]:
+        """The current routing bounds (moves when a rebalance lands)."""
+        return tuple(self._routing.lst)
+
     def _shard_of(self, key: int) -> int:
-        return bisect_right(self._splitters_list, int(key))
+        return self._routing.shard_of(key)
 
     def _split(self, keys_arr: np.ndarray) -> np.ndarray:
         """Vectorized shard assignment: one searchsorted for the batch."""
-        return np.searchsorted(self._splitters, keys_arr, side="right")
+        return self._routing.split(keys_arr)
+
+    def _note_ops(self, si: int, k: int = 1) -> None:
+        self._load[si] += k
+        self._load_total[si] += k
+        self._ops_since_check += k
+
+    def _note_key(self, si: int, key: int) -> None:
+        """Scalar load note incl. the key-space histogram bucket."""
+        self._note_ops(si)
+        lo, hi = self._routing.bounds(si)
+        b = int((key - lo) * _HIST_B / (hi - lo))
+        h = self._load_hist[si]
+        h[b if 0 <= b < _HIST_B else _HIST_B - 1] += 1.0
+
+    def _note_keys(self, si: int, keys_arr: np.ndarray) -> None:
+        """Batched load note: one bincount feeds the histogram.
+
+        Racy-benign like the scalar counters (reads note without the
+        gate); the histogram is a trigger heuristic, never a correctness
+        input."""
+        self._note_ops(si, int(keys_arr.size))
+        lo, hi = self._routing.bounds(si)
+        b = ((keys_arr.astype(np.float64) - lo)
+             * (_HIST_B / float(hi - lo))).astype(np.int64)
+        np.clip(b, 0, _HIST_B - 1, out=b)
+        self._load_hist[si] += np.bincount(b, minlength=_HIST_B)
 
     # ---------------------------------------------------------------- cache
     def _build_shared_cache(self) -> None:
@@ -184,11 +323,17 @@ class ShardedLSMStore:
     # ------------------------------------------------------------- writes
     def put(self, key: int, value: bytes) -> None:
         with self._write_gate:
-            self.shards[self._shard_of(key)].put(key, value)
+            si = self._routing.shard_of(key)
+            self.shards[si].put(key, value)
+            self._note_key(si, key)
+        self._maybe_rebalance()
 
     def delete(self, key: int) -> None:
         with self._write_gate:
-            self.shards[self._shard_of(key)].delete(key)
+            si = self._routing.shard_of(key)
+            self.shards[si].delete(key)
+            self._note_key(si, key)
+        self._maybe_rebalance()
 
     def put_batch(self, keys, values) -> None:
         """Batched puts, split per shard by one vectorized searchsorted.
@@ -197,12 +342,14 @@ class ShardedLSMStore:
         numpy — no per-element Python indexing on the ingest hot path."""
         if isinstance(values, (bytes, bytearray)):
             keys_arr = np.asarray(keys, dtype=KEY_DTYPE)
-            sids = self._split(keys_arr)
             val = bytes(values)
             with self._write_gate:
+                sids = self._routing.split(keys_arr)
                 for si in np.unique(sids):
-                    self.shards[int(si)].put_batch(
-                        keys_arr[sids == si].tolist(), val)
+                    sel = keys_arr[sids == si]
+                    self.shards[int(si)].put_batch(sel.tolist(), val)
+                    self._note_keys(int(si), sel)
+            self._maybe_rebalance()
             return
         self.write_batch(zip(keys, values))
 
@@ -221,16 +368,21 @@ class ShardedLSMStore:
             return
         keys_arr = np.fromiter((int(k) for k, _ in pairs), KEY_DTYPE,
                                len(pairs))
-        sids = self._split(keys_arr)
         with self._write_gate:
+            # split under the gate: routing must not move between
+            # assignment and the per-shard writes
+            sids = self._routing.split(keys_arr)
             for si in np.unique(sids):
                 idx = np.nonzero(sids == si)[0]
                 self.shards[int(si)].write_batch(pairs[int(j)] for j in idx)
+                self._note_keys(int(si), keys_arr[idx])
+        self._maybe_rebalance()
 
     def flush(self) -> None:
         with self._write_gate:
             for s in self.shards:
                 s.flush()
+        self._maybe_rebalance()
 
     def fsync_wal(self) -> None:
         """Durability barrier on every shard's active WAL."""
@@ -242,10 +394,22 @@ class ShardedLSMStore:
                     ) -> Optional[Version]:
         return None if snapshot is None else snapshot.versions[si]
 
+    def _snap_routing(self, snapshot: ShardedSnapshot) -> _Routing:
+        r = snapshot.routing
+        return r if r is not None else self._routing
+
     def get(self, key: int,
             snapshot: Optional[ShardedSnapshot] = None) -> Optional[bytes]:
-        si = self._shard_of(key)
-        return self.shards[si].get(key, snapshot=self._shard_snap(snapshot, si))
+        if snapshot is not None:
+            si = self._snap_routing(snapshot).shard_of(key)
+            return self.shards[si].get(key, snapshot=snapshot.versions[si])
+        while True:
+            r = self._routing
+            si = r.shard_of(key)
+            out = self.shards[si].get(key)
+            if self._routing is r:   # no migration landed mid-read
+                self._note_key(si, key)
+                return out
 
     def multi_get(self, keys: Sequence[int],
                   snapshot: Optional[ShardedSnapshot] = None
@@ -254,28 +418,53 @@ class ShardedLSMStore:
         shard resolves its sub-batch with its own vectorized ``multi_get``,
         and results scatter back to the callers' positions."""
         keys_arr = np.asarray(list(keys), dtype=KEY_DTYPE)
-        n = int(keys_arr.size)
-        results: List[Optional[bytes]] = [None] * n
-        if n == 0:
-            return results
-        sids = self._split(keys_arr)
+        if keys_arr.size == 0:
+            return []
+        if snapshot is not None:
+            return self._multi_get_routed(self._snap_routing(snapshot),
+                                          keys_arr, snapshot)
+        while True:
+            r = self._routing
+            results = self._multi_get_routed(r, keys_arr, None)
+            if self._routing is r:
+                return results
+
+    def _multi_get_routed(self, r: _Routing, keys_arr: np.ndarray,
+                          snapshot: Optional[ShardedSnapshot]
+                          ) -> List[Optional[bytes]]:
+        results: List[Optional[bytes]] = [None] * int(keys_arr.size)
+        sids = r.split(keys_arr)
         for si in np.unique(sids):
             idx = np.nonzero(sids == si)[0]
             sub = self.shards[int(si)].multi_get(
                 keys_arr[idx], snapshot=self._shard_snap(snapshot, int(si)))
             for j, v in zip(idx, sub):
                 results[int(j)] = v
+            if snapshot is None:
+                self._note_keys(int(si), keys_arr[idx])
         return results
 
     def seek(self, key: int,
              snapshot: Optional[ShardedSnapshot] = None) -> Optional[int]:
         """First key >= key across shards: because the partition is
         order-preserving, the first shard (in range order) with any
-        result holds the global minimum."""
-        for si in range(self._shard_of(key), len(self.shards)):
-            got = self.shards[si].seek(key,
+        in-range result holds the global minimum."""
+        if snapshot is not None:
+            return self._seek_routed(self._snap_routing(snapshot), key,
+                                     snapshot)
+        while True:
+            r = self._routing
+            got = self._seek_routed(r, key, None)
+            if self._routing is r:
+                return got
+
+    def _seek_routed(self, r: _Routing, key: int,
+                     snapshot: Optional[ShardedSnapshot]) -> Optional[int]:
+        for si in range(r.shard_of(key), len(self.shards)):
+            lo, hi = r.bounds(si)
+            got = self.shards[si].seek(max(int(key), lo),
                                        snapshot=self._shard_snap(snapshot, si))
-            if got is not None:
+            if got is not None and got < hi:
                 return got
         return None
 
@@ -297,15 +486,36 @@ class ShardedLSMStore:
     def _scan_impl(self, start_key: int, count: int,
                    snapshot: Optional[ShardedSnapshot], scalar: bool
                    ) -> List[Tuple[int, bytes]]:
+        if snapshot is not None:
+            return self._scan_routed(self._snap_routing(snapshot), start_key,
+                                     count, snapshot, scalar)
+        while True:
+            r = self._routing
+            out = self._scan_routed(r, start_key, count, None, scalar)
+            if self._routing is r:
+                return out
+
+    def _scan_routed(self, r: _Routing, start_key: int, count: int,
+                     snapshot: Optional[ShardedSnapshot], scalar: bool
+                     ) -> List[Tuple[int, bytes]]:
         out: List[Tuple[int, bytes]] = []
-        for si in range(self._shard_of(start_key), len(self.shards)):
+        for si in range(r.shard_of(int(start_key)), len(self.shards)):
             need = count - len(out)
             if need <= 0:
                 break
+            lo, hi = r.bounds(si)
             shard = self.shards[si]
             fn = shard.scan_scalar if scalar else shard.scan
-            out.extend(fn(start_key, need,
-                          snapshot=self._shard_snap(snapshot, si)))
+            part = fn(max(int(start_key), lo), need,
+                      snapshot=self._shard_snap(snapshot, si))
+            if part and part[-1][0] >= hi:
+                # mid-migration only: clip entries the captured routing
+                # assigns to a later shard.  Results are sorted, so every
+                # in-range entry precedes the clipped tail — the kept
+                # prefix is complete and the next shard continues it.
+                keys = [k for k, _ in part]
+                part = part[:bisect_left(keys, hi)]
+            out.extend(part)
         return out[:count]
 
     # ----------------------------------------------------------- snapshots
@@ -316,17 +526,23 @@ class ShardedLSMStore:
         a torn one:
 
         1. The facade **write gate**: acquisition holds the same lock every
-           facade write path takes, so a concurrent cross-shard
-           ``write_batch``/``flush`` is either entirely before or entirely
-           after the snapshot — never half-visible.  (Pinning shard 0,
-           losing the CPU to a writer that lands on shards 0 *and* 1, then
-           pinning shard 1 was exactly the torn interleaving.)
+           facade write path (and a rebalance) takes, so a concurrent
+           cross-shard ``write_batch``/``flush``/migration is either
+           entirely before or entirely after the snapshot — never
+           half-visible.  (Pinning shard 0, losing the CPU to a writer that
+           lands on shards 0 *and* 1, then pinning shard 1 was exactly the
+           torn interleaving.)
         2. **Pin-validate-retry** against background installs: after
            pinning all shards, each shard's current version id is re-read;
            if any shard installed a version mid-acquisition (async flush or
            compaction on a worker thread), the pins are released and the
            tuple is re-taken.  Installs are rate-limited by real merge
            work, so the seqlock-style loop settles immediately in practice.
+
+        The snapshot also captures the routing it was taken under (stable
+        here — the gate excludes migrations): its reads route with those
+        splitters forever, and the pins keep any since-migrated runs alive
+        in their original shard.
 
         Remaining async-mode caveat (documented, not defended): snapshots
         see only *installed* versions, never memtables, and each shard's
@@ -341,7 +557,7 @@ class ShardedLSMStore:
                 pins = tuple(s.get_snapshot() for s in self.shards)
                 if all(p.version_id == s.manifest.current().version_id
                        for s, p in zip(self.shards, pins)):
-                    return ShardedSnapshot(pins)
+                    return ShardedSnapshot(pins, self._routing)
                 tel = self.config.telemetry
                 if tel is not None:
                     tel.emit("snapshot_retry", shards=len(self.shards))
@@ -352,19 +568,340 @@ class ShardedLSMStore:
         for s, v in zip(self.shards, snapshot.versions):
             s.release_snapshot(v)
 
+    # ---------------------------------------------------------- rebalancing
+    def _on_shard_idle(self) -> None:
+        """Scheduler-worker hook at a drained-queue boundary: flag only.
+
+        A worker thread must never *run* the rebalance — the migration
+        quiesces that worker's own scheduler, which would deadlock — so the
+        hook just records that the window looks skewed; the next foreground
+        write (or ``wait_for_quiesce``) consumes the flag.
+        """
+        cfg = self.config
+        iv = cfg.rebalance_interval_ops
+        if iv <= 0 or self._in_rebalance or self._ops_since_check < iv:
+            return
+        loads = self._load
+        tot = sum(loads)
+        if tot and max(loads) * len(loads) >= cfg.rebalance_ratio * tot:
+            self._rebalance_needed = True
+
+    def _maybe_rebalance(self) -> bool:
+        """Write-boundary trigger: cheap flag/counter test, full check at
+        most every ``rebalance_interval_ops`` routed ops."""
+        cfg = self.config
+        if cfg.rebalance_interval_ops <= 0 or self._in_rebalance:
+            return False
+        if not self._rebalance_needed \
+                and self._ops_since_check < cfg.rebalance_interval_ops:
+            return False
+        return self.rebalance_now()
+
+    def arm_rebalancing(self, interval_ops: int,
+                        ratio: Optional[float] = None) -> None:
+        """Enable (or retune) automatic rebalancing on a live facade.
+
+        Resets the load window.  The intended use is bulk-load-then-serve:
+        a sequential preload looks maximally skewed to the windowed tracker
+        (every sorted wave lands in one shard), so load with
+        ``rebalance_interval_ops=0`` and arm once the serving phase starts.
+        """
+        with self._write_gate:
+            self.config.rebalance_interval_ops = int(interval_ops)
+            if ratio is not None:
+                self.config.rebalance_ratio = float(ratio)
+            self._load = [0] * len(self.shards)
+            self._load_hist = [np.zeros(_HIST_B)
+                               for _ in range(len(self.shards))]
+            self._ops_since_check = 0
+            self._rebalance_needed = False
+
+    def rebalance_now(self, force: bool = False) -> bool:
+        """Evaluate the load window and rebalance if it is skewed (or
+        ``force``).  Returns True iff a migration landed."""
+        return self._rebalance(None, force)
+
+    def rebalance_to(self, splitters: Sequence[int]) -> bool:
+        """Migrate to an explicit splitter vector (tests / operators).
+
+        Same protocol as the automatic path, skipping derivation."""
+        lst = [int(x) for x in splitters]
+        if len(lst) != len(self.shards) - 1:
+            raise ValueError(
+                f"need {len(self.shards) - 1} splitters, got {len(lst)}")
+        if lst != sorted(set(lst)):
+            raise ValueError("splitters must be strictly ascending")
+        return self._rebalance(lst, True)
+
+    def _rebalance(self, target: Optional[List[int]], force: bool) -> bool:
+        if self._in_rebalance:       # reentrancy (quiesce inside migration)
+            return False
+        with self._write_gate:
+            if self._in_rebalance:
+                return False
+            self._in_rebalance = True
+            try:
+                self._rebalance_needed = False
+                self._ops_since_check = 0
+                loads = list(self._load)
+                tot = sum(loads)
+                n = len(self.shards)
+                ratio = (max(loads) * n / tot) if tot else 1.0
+                if not force and ratio < self.config.rebalance_ratio:
+                    # decay the window so stale skew ages out
+                    self._load = [v // 2 for v in loads]
+                    self._load_hist = [h * 0.5 for h in self._load_hist]
+                    return False
+                return self._rebalance_to(target, loads, ratio)
+            finally:
+                self._in_rebalance = False
+
+    def _rebalance_to(self, target: Optional[List[int]],
+                      loads: List[int], ratio: float) -> bool:
+        """The migration protocol (gate held, ``_in_rebalance`` set).
+
+        Order is the crash-safety argument (DESIGN.md §15): (1) quiesce —
+        memtables become runs, schedulers drain; (2) build + durably commit
+        import runs in every destination; (3) append the new splitters to
+        the durable routing log, then publish the reader-visible routing
+        swap; (4) strip each source to its new range (durable per shard).
+        A crash before (3) recovers the old routing and the recovery clip
+        drops the committed imports — exact pre-migration state; a crash
+        after (3) recovers the new routing and the clip finishes the
+        source cleanup — exact post-migration state.
+        """
+        t0 = time.perf_counter_ns()
+        n = len(self.shards)
+        # (1) quiesce: the migration operates on a settled, run-only tree
+        for s in self.shards:
+            s.flush()
+        for s in self.shards:
+            if not s.wait_for_quiesce(timeout=120.0):
+                return False     # nothing mutated yet: clean abort
+        old = self._routing
+        new_lst = target if target is not None \
+            else self._derive_splitters(loads)
+        if new_lst is None or list(new_lst) == old.lst:
+            self._load = [v // 2 for v in loads]
+            self._load_hist = [h * 0.5 for h in self._load_hist]
+            return False
+        new = _Routing(new_lst, old.epoch + 1)
+        tel = self.config.telemetry
+        if tel is not None:
+            tel.emit("rebalance_start", epoch=new.epoch,
+                     imbalance=round(ratio, 3), window_ops=int(sum(loads)))
+        if self._budget is not None:
+            self._budget.acquire()   # migration rides the worker budget —
+        try:                         # acquired AFTER quiesce (a drained
+            # pipeline holds no permit; permit-then-quiesce deadlocks
+            # at budget=1)
+            moves, moved = self._install_imports(old, new)      # (2)
+            self._commit_routing(new)                           # (3)
+            self._cleanup_sources(new)                          # (4)
+        finally:
+            if self._budget is not None:
+                self._budget.release()
+        if tel is not None:
+            for si in range(n):
+                ol, oh = old.bounds(si)
+                nl, nh = new.bounds(si)
+                if (nl, nh) == (ol, oh):
+                    continue
+                if nl >= ol and nh <= oh:
+                    tel.emit("shard_split", shard=si, lo=nl, hi=nh)
+                elif nl <= ol and nh >= oh:
+                    tel.emit("shard_merge", shard=si, lo=nl, hi=nh)
+                else:                # slid sideways: shrank one side,
+                    tel.emit("shard_shift", shard=si, lo=nl, hi=nh)  # grew the other
+        self._reassign_cache_budgets(loads)
+        # the moved data lands as L0 runs and the stripped sources may be
+        # under-shaped: reshape in the background (no-op when shaped; sync
+        # mode compacts inline to stay the deterministic oracle)
+        for s in self.shards:
+            if s._scheduler is not None:
+                s._scheduler.submit(CompactJob())
+            else:
+                s._compact_until_quiet()
+        self.rebalances += 1
+        self._load = [0] * n
+        self._load_hist = [np.zeros(_HIST_B) for _ in range(n)]
+        dur = time.perf_counter_ns() - t0
+        if tel is not None:
+            tel.record("rebalance", dur)
+            tel.emit("rebalance_end", epoch=new.epoch, moves=moves,
+                     entries=moved, t0=t0, dur_ns=dur)
+        return True
+
+    def _derive_splitters(self, loads: List[int]) -> Optional[List[int]]:
+        """Load-weighted key quantiles over the shards' stored keys.
+
+        Each shard's unique key set (stride-subsampled when huge) carries
+        its window load distributed by the shard's key-space histogram —
+        keys in hot buckets weigh more, so a concentrated hot range is cut
+        at its *measured* median in one step instead of being chased
+        through several even-spread half-migrations.  The global cumsum is
+        cut at i/n of total weight, which simultaneously splits hot shards
+        and merges cold neighbours.  Returns None when there is no data
+        (or no usable cut).
+        """
+        n = len(self.shards)
+        routing = self._routing
+        keys_parts: List[np.ndarray] = []
+        w_parts: List[np.ndarray] = []
+        for si, s in enumerate(self.shards):
+            runs = [r for lvl in s._levels for r in lvl if len(r)]
+            if not runs:
+                continue
+            if len(runs) == 1:
+                k = runs[0].keys
+            else:
+                k = np.unique(np.concatenate([r.keys for r in runs]))
+            stride = max(1, k.size // 65536)
+            if stride > 1:
+                k = k[::stride]
+            keys_parts.append(k)
+            # bucket each sampled key, spread the bucket's observed load
+            # over its keys; smooth with 1/8 of a uniform mass so buckets
+            # the window never touched still get a floor (and a shard with
+            # an empty histogram degrades to the even-spread weighting)
+            lo, hi = routing.bounds(si)
+            h = self._load_hist[si]
+            b = ((k.astype(np.float64) - lo)
+                 * (_HIST_B / float(hi - lo))).astype(np.int64)
+            np.clip(b, 0, _HIST_B - 1, out=b)
+            wb = h + max(float(h.sum()), 1.0) / (_HIST_B * 8.0)
+            wb *= (loads[si] + 1.0) / wb.sum()
+            cnt = np.maximum(np.bincount(b, minlength=_HIST_B), 1)
+            w_parts.append(wb[b] / cnt[b])
+        if not keys_parts:
+            return None
+        K = np.concatenate(keys_parts)   # sorted: shard ranges are disjoint
+        W = np.concatenate(w_parts)
+        cum = np.cumsum(W)
+        targets = float(cum[-1]) * np.arange(1, n) / n
+        idx = np.minimum(np.searchsorted(cum, targets), K.size - 1)
+        out: List[int] = []
+        prev = -1
+        for c in K[idx]:
+            c = int(c)
+            if c <= prev:            # enforce strictly ascending
+                c = prev + 1
+            out.append(c)
+            prev = c
+        if out[-1] >= _KEY_SPACE_END:
+            return None              # fix-up ran off the key space
+        return out
+
+    def _install_imports(self, old: _Routing, new: _Routing
+                         ) -> Tuple[int, int]:
+        """Step (2): durably commit every leaving-range slice into its new
+        owner as a fresh L0 run (deduped newest-wins; whole-key tombstones
+        collapse — the destination owned nothing in the moved range, so
+        nothing live is shadowed)."""
+        tel = self.config.telemetry
+        moves = moved = 0
+        for si, s in enumerate(self.shards):
+            ol, oh = old.bounds(si)
+            nl, nh = new.bounds(si)
+            # what shard si gives away = its old range minus its new range:
+            # at most a low-side and a high-side interval
+            for lo, hi in ((ol, min(oh, nl)), (max(ol, nh), oh)):
+                if lo >= hi:
+                    continue
+                cols = s.export_range(lo, hi)
+                if cols is None:
+                    continue
+                k, sq, vl, vv = cols
+                dest_ids = new.split(k)
+                for dj in np.unique(dest_ids):
+                    dj = int(dj)
+                    mask = dest_ids == dj
+                    dst = self.shards[dj]
+                    run = build_run(k[mask], sq[mask], vl[mask], vv[mask],
+                                    bits_per_key=dst._bits_for_level(0),
+                                    drop_tombstones=True,
+                                    block_size=self.config.block_size,
+                                    key_bytes=self.config.key_bytes,
+                                    hash_fn=dst._bloom_hash_fn())
+                    if len(run) == 0:
+                        continue     # the slice was all tombstones
+                    dst.import_migrated_run(run)
+                    moves += 1
+                    moved += len(run)
+                    if tel is not None:
+                        tel.emit("run_migrate", src=si, dst=dj,
+                                 entries=len(run), bytes=run.data_bytes)
+        self.migrated_entries += moved
+        return moves, moved
+
+    def _commit_routing(self, new: _Routing) -> None:
+        """Step (3): durable intent first (the log append is fsynced
+        immediately — routing changes are rare), then the reader-visible
+        reference swap.  Everything written after this point routes — and
+        is WAL-logged — under the new splitters, which is the invariant
+        recovery's range clip relies on."""
+        self._routing_log.append(tuple(new.lst))
+        self._routing_synced = len(self._routing_log)
+        self._routing = new
+
+    def _cleanup_sources(self, new: _Routing) -> None:
+        """Step (4): drop each shard's moved-away entries (durable per
+        shard; a crash part-way is finished by recovery's clip)."""
+        for si, s in enumerate(self.shards):
+            lo, hi = new.bounds(si)
+            s.strip_to_range(lo, hi)
+
+    def _reassign_cache_budgets(self, loads: List[int]) -> None:
+        """Re-slice the shared cache load-proportionally (1/(4N) floor).
+
+        A merged cold shard hands its idle budget back to the hot range;
+        namespaces never renumber, so no entries are invalidated — only
+        the admission budgets move."""
+        if self.block_cache is None or self.config.cache_bytes <= 0:
+            return
+        total = self.config.cache_bytes
+        n = len(self.shards)
+        base = (sum(loads) + n) // (3 * n) + 1   # floor ≈ 1/(4N) share
+        w = [ld + base for ld in loads]
+        wsum = sum(w)
+        budgets = [total * wi // wsum for wi in w]
+        budgets[max(range(n), key=lambda i: w[i])] += total - sum(budgets)
+        for i, s in enumerate(self.shards):
+            if s.block_cache is not None:
+                s.block_cache.budget_bytes = budgets[i]
+            self.block_cache.set_ns_budget(i, budgets[i])
+
     # ------------------------------------------------------------ recovery
     def crash(self) -> None:
         """Whole-store crash: every shard aborts its background pipeline and
         loses volatile state; each shard's fsynced WAL segments + durable
-        manifest survive independently."""
+        manifest survive independently, as does the synced prefix of the
+        routing log."""
         for s in self.shards:
             s.crash()
+        del self._routing_log[self._routing_synced:]
 
     def recover(self) -> None:
         """Recover every shard (durable manifest + consolidated WAL replay),
-        clearing and re-pinning its slice of the shared cache."""
-        for s in self.shards:
+        restore the last durable routing, and clip each shard to its routed
+        range — which atomically resolves a crash mid-migration to either
+        the exact pre-migration state (routing commit didn't land: the
+        clip drops the already-committed import copies) or the exact
+        post-migration state (it did: the clip finishes the source
+        cleanup).  Replayed WAL/memtable contents are always in-range
+        w.r.t. the recovered routing, because writes only ever route under
+        a routing that was durably logged first."""
+        routing = _Routing(self._routing_log[-1],
+                           epoch=len(self._routing_log) - 1)
+        self._routing = routing
+        for si, s in enumerate(self.shards):
             s.recover()
+            lo, hi = routing.bounds(si)
+            s.strip_to_range(lo, hi)
+        self._load = [0] * len(self.shards)
+        self._load_hist = [np.zeros(_HIST_B) for _ in range(len(self.shards))]
+        self._ops_since_check = 0
+        self._rebalance_needed = False
 
     def close(self) -> None:
         """Drain and stop every shard's background workers (each shard then
@@ -379,8 +916,20 @@ class ShardedLSMStore:
             raise err
 
     def wait_for_quiesce(self, timeout: Optional[float] = None) -> bool:
-        """Block until every shard's background pipeline drains."""
+        """Block until every shard's background pipeline drains.
+
+        A quiesce is also a rebalance boundary: if the drained window is
+        skewed past the trigger, the migration runs here (foreground
+        thread, gate taken inside) and its reshaping jobs are drained
+        within the same deadline — after a True return the facade is both
+        settled *and* balanced w.r.t. the closed window."""
         deadline = None if timeout is None else time.monotonic() + timeout
+        ok = self._drain_shards(deadline)
+        if ok and not self._in_rebalance and self._maybe_rebalance():
+            ok = self._drain_shards(deadline)
+        return ok
+
+    def _drain_shards(self, deadline: Optional[float]) -> bool:
         ok = True
         for s in self.shards:
             left = None if deadline is None \
@@ -394,6 +943,39 @@ class ShardedLSMStore:
         """Aggregated counters across shards (a fresh fieldwise-summed
         ``IOStats`` — use ``snapshot()``/``delta()`` on it as usual)."""
         return IOStats.merge(s.stats for s in self.shards)
+
+    @property
+    def shard_stats(self) -> List[dict]:
+        """Per-shard ``IOStats.to_dict()``, in shard order — the raw
+        per-shard sensor block behind ``shard_load_summary``."""
+        return [s.stats.to_dict() for s in self.shards]
+
+    def shard_load_ops(self) -> List[int]:
+        """Cumulative facade ops (reads + writes) routed per shard.
+        Benchmarks diff two calls to get a window's imbalance."""
+        return list(self._load_total)
+
+    def shard_load_summary(self) -> List[dict]:
+        """Cheap per-shard load/pressure summary: routed-op share, live
+        bytes, and the stall/write counters rebalancing decisions read."""
+        n = len(self.shards)
+        tot = sum(self._load_total) or 1
+        out = []
+        for si, s in enumerate(self.shards):
+            lo, hi = self._routing.bounds(si)
+            st = s.stats
+            phys, _ = s._space_profile()
+            out.append(dict(shard=si, lo=lo, hi=hi,
+                            ops=self._load_total[si],
+                            op_share=self._load_total[si] / tot,
+                            window_ops=self._load[si],
+                            live_bytes=phys,
+                            entries=s.total_entries,
+                            wal_appends=st.wal_appends,
+                            point_reads=st.point_reads,
+                            range_reads=st.range_reads,
+                            stall_ns=st.stall_ns))
+        return out
 
     @property
     def telemetry(self):
