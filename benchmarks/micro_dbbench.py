@@ -285,6 +285,23 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
             s0 = db.stats.snapshot()
             t_read = read_random(db, n_reads, key_space)
             d_read = db.stats.delta(s0)
+            # ---- paranoid read lane (§16.2): the same point-read stream
+            # with per-block checksum verification on.  Results must be
+            # byte-identical to the unchecked lane (verification only
+            # checks, never transforms); the column reports the overhead.
+            probe = np.random.default_rng(31).integers(
+                0, key_space, 512, dtype=np.uint64).tolist()
+            plain_mg = db.multi_get(probe)
+            plain_pt = [db.get(int(k)) for k in probe[:64]]
+            db.config.paranoid_checks = True
+            assert db.multi_get(probe) == plain_mg, \
+                "paranoid lane changed multi_get results"
+            assert [db.get(int(k)) for k in probe[:64]] == plain_pt, \
+                "paranoid lane changed point-read results"
+            t_read_paranoid = read_random(db, n_reads, key_space)
+            db.config.paranoid_checks = False
+            paranoid_overhead_pct = ((t_read_paranoid - t_read) / t_read
+                                     * 100.0 if t_read else 0.0)
             t_multiget = multiget_random(db, n_reads, key_space)
             s0 = db.stats.snapshot()
             t_seek = seek_random(db, n_reads, key_space, 0)
@@ -383,7 +400,9 @@ def run(n: int = DEFAULT_N, value_sizes=VALUE_SIZES) -> List[Dict]:
                 rebalances=hot_rebalances,
                 compact_mb_s=compact["compact_mb_s"],
                 compact_speedup=compact["compact_speedup"],
-                readrandom_us=t_read, seekrandom_us=t_seek,
+                readrandom_us=t_read,
+                paranoid_overhead_pct=paranoid_overhead_pct,
+                seekrandom_us=t_seek,
                 seeknext10_us=t_next10, seeknext100_us=t_next100,
                 multiget_us=t_multiget,
                 multiget_speedup=t_read / t_multiget if t_multiget else 0.0,
@@ -417,7 +436,7 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
            f"load_shard{SHARD_N}_kops,shard_speedup,"
            "load_hot_kops,hot_rebal_speedup,rebalances,"
            "compact_mb_s,compact_speedup,"
-           "readrandom_us,"
+           "readrandom_us,paranoid_overhead_pct,"
            "seekrandom_us,seeknext10_us,seeknext100_us,multiget_us,"
            "multiget_speedup,scanscalar100_us,iterscan100_us,"
            "iterscan_speedup,scan_view_kops,scan_view_speedup,"
@@ -435,7 +454,8 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
               f"{r['load_hot_kops']:.1f},{r['hot_rebal_speedup']:.2f},"
               f"{r['rebalances']},"
               f"{r['compact_mb_s']:.1f},{r['compact_speedup']:.1f},"
-              f"{r['readrandom_us']:.2f},{r['seekrandom_us']:.2f},"
+              f"{r['readrandom_us']:.2f},{r['paranoid_overhead_pct']:.1f},"
+              f"{r['seekrandom_us']:.2f},"
               f"{r['seeknext10_us']:.2f},{r['seeknext100_us']:.2f},"
               f"{r['multiget_us']:.2f},{r['multiget_speedup']:.1f},"
               f"{r['scanscalar100_us']:.2f},{r['iterscan100_us']:.2f},"
@@ -473,6 +493,12 @@ def main(n: int = DEFAULT_N, value_sizes=VALUE_SIZES, smoke: bool = False,
             # sane here (the >=2x speedup claim is a 100k-scale number —
             # at smoke scale the tree is too shallow to gate on it)
             assert r["scan_view_kops"] > 0 and r["scan_view_speedup"] > 0, r
+            # paranoid lane (§16.2): bit-identical reads are asserted
+            # inline by run(); the overhead column must exist and be a
+            # sane percentage (noise can make a tiny run come out
+            # slightly negative)
+            assert "paranoid_overhead_pct" in r, r
+            assert r["paranoid_overhead_pct"] > -90.0, r
         print(f"smoke-ok: load_batch {rows[0]['load_batch_speedup']:.1f}x, "
               f"load_async {rows[0]['load_async_speedup']:.1f}x "
               f"(stall {rows[0]['stall_pct']:.1f}%), "

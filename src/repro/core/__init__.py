@@ -10,12 +10,17 @@ Public API:
                                     per-thread accumulation)
     Telemetry, LatencyHistogram,
     EventTrace                    — latency histograms + event trace (§14)
+    FaultInjector, crc32c, ...    — fault injection + end-to-end checksums
+                                    (§16): CorruptionError / InjectedFault /
+                                    StoreDegradedError typed failures
 """
 from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
                     garnering_theoretical_fprs, theoretical_fpr,
                     zero_result_read_cost)
 from .cache import BlockCache, BlockCacheView, PinnedLevelManager
 from .engine import LSMConfig, LSMStore
+from .faults import (FAULT_SITES, CorruptionError, FaultInjector,
+                     InjectedFault, StoreDegradedError, crc32c, crc32c_rows)
 from .iterator import MergingIterator
 from .manifest import Manifest, RunStorage, Version
 from .memtable import ImmutableMemtable, Memtable, WriteAheadLog
@@ -42,5 +47,7 @@ __all__ = [
     "SortedRun", "build_run", "merge_runs", "merge_runs_scalar",
     "RangeView", "build_range_view",
     "Telemetry", "LatencyHistogram", "EventTrace", "TraceEvent", "StatsHub",
+    "FAULT_SITES", "FaultInjector", "InjectedFault", "CorruptionError",
+    "StoreDegradedError", "crc32c", "crc32c_rows",
     "BLOCK_SIZE", "KEY_BYTES",
 ]

@@ -37,6 +37,7 @@ import numpy as np
 
 from .bloom import allocate_fprs, bits_for_fpr
 from .cache import BlockCache, PinnedLevelManager
+from .faults import CorruptionError, FaultInjector, StoreDegradedError
 from .iterator import MergingIterator, combined_mem_items
 from .manifest import Manifest, RunStorage, Version
 from .memtable import ImmutableMemtable, Memtable, WriteAheadLog
@@ -150,6 +151,22 @@ class LSMConfig:
                                         # the current window exceeds this
                                         # (1.0 = perfectly balanced, N =
                                         # fully skewed into one shard)
+    paranoid_checks: bool = False       # verify per-block checksums on every
+                                        # point-read/seek block touch
+                                        # (DESIGN.md §16.2); a mismatch
+                                        # raises CorruptionError.  Recovery
+                                        # scrubs regardless of this flag.
+    faults: Optional["FaultInjector"] = None
+                                        # fault-injection hooks (§16.1).
+                                        # None (default) disables every
+                                        # site at the cost of one `is None`
+                                        # test — the same zero-overhead
+                                        # contract as `telemetry`.
+    bg_max_retries: int = 2             # background flush/compaction retry
+                                        # budget (bounded exponential
+                                        # backoff, §16.3); past it the job
+                                        # is abandoned and the store
+                                        # degrades read-only
 
 
 class LSMStore:
@@ -173,6 +190,15 @@ class LSMStore:
         self._levels: List[List[SortedRun]] = [[]]
         self._max_level = 1
         self._seq = 0
+        # Graceful degradation (DESIGN.md §16.3): set to the root failure
+        # when the background pipeline exhausts its retry budget.  Writes
+        # then raise StoreDegradedError; reads keep serving the committed
+        # tree (no lock — a single attribute test on the write path).
+        self._degraded: Optional[BaseException] = None
+        # Set once the pipeline failure has been surfaced to a caller
+        # (wait_for_quiesce / submit); close() on such a store is an
+        # idempotent, loss-free no-raise cleanup instead of a second raise.
+        self._bg_failure_surfaced = False
         self._pallas_probe_fn = _UNSET  # lazy: resolved on first multi_get
         self._pallas_hash_fn = _UNSET   # lazy: resolved on first filter build
         self._pallas_merge_fn = _UNSET  # lazy: resolved on first compaction
@@ -215,10 +241,35 @@ class LSMStore:
     def telemetry(self) -> Optional[Telemetry]:
         return self.config.telemetry
 
+    # ------------------------------------------------------ degraded mode
+    @property
+    def degraded(self) -> bool:
+        """True when persistent background failure flipped the store
+        read-only (§16.3); cleared by ``crash()`` + ``recover()``."""
+        return self._degraded is not None
+
+    def _enter_degraded(self, exc: BaseException) -> None:
+        """Flip read-only (idempotent; called by the scheduler worker when
+        a background job exhausts its retry budget)."""
+        if self._degraded is None:
+            self._degraded = exc
+            tel = self.config.telemetry
+            if tel is not None:
+                tel.emit("degraded", error=repr(exc))
+
+    def _raise_degraded(self) -> None:
+        raise StoreDegradedError(
+            "store is read-only after persistent background failure; "
+            "reads keep serving — crash()+recover() to restore writes"
+        ) from self._degraded
+
     def _wal_fsync(self, st: IOStats) -> None:
         """fsync the active WAL, charging ``st`` and (when telemetry is on)
         recording the fsync latency — the single helper every durability
         point uses so the ``wal_fsync`` histogram sees all of them."""
+        f = self.config.faults
+        if f is not None:
+            f.check("wal_fsync")
         tel = self.config.telemetry
         if tel is None:
             self.wal.fsync(st)
@@ -288,6 +339,12 @@ class LSMStore:
         tel.record("put", time.perf_counter_ns() - t0)
 
     def _write(self, key: int, value: Optional[bytes]):
+        if self._degraded is not None:
+            self._raise_degraded()
+        f = self.config.faults
+        if f is not None:
+            f.check("wal_append")  # before any mutation: a failed append
+                                   # leaves no partial record anywhere
         st = self._stats.local()
         self._seq += 1
         self.wal.append(1 if value is None else 0, key, self._seq,
@@ -348,6 +405,9 @@ class LSMStore:
         n = len(pairs)
         if n == 0:
             return
+        if self._degraded is not None:
+            self._raise_degraded()
+        faults = self.config.faults
         st = self._stats.local()
         keys_l, vals_l = zip(*pairs)
         keys_l = list(map(int, keys_l))
@@ -367,6 +427,8 @@ class LSMStore:
             j = max(i + 1,
                     int(np.searchsorted(cum, base + room, side="left")))
             chunk_vals = vals_l[i:j]
+            if faults is not None:
+                faults.check("wal_append")  # per chunk, before mutation
             first_seq = self._seq + 1
             self._seq += j - i
             self.wal.append_batch_cols(
@@ -424,15 +486,22 @@ class LSMStore:
             t0 = time.perf_counter_ns()
             tok = tel.emit("flush_start", entries=len(self.memtable))
         self._wal_fsync(st)
+        f = self.config.faults
+        if f is not None:
+            f.check("flush_write")
         run = self.memtable.to_run(self._bits_for_level(0), st,
                                    hash_fn=self._bloom_hash_fn())
-        self.memtable.clear()
-        self.wal.truncate()
         if len(run):
             levels = [list(lvl) for lvl in self._levels]
             levels[0].append(run)  # newest last
             self._levels = levels  # atomic swap: readers never see a torn L0
             self._commit()
+        # The WAL/memtable are released only *after* the manifest fsync in
+        # _commit(): if that fsync fails, the flushed records are still in
+        # the (fsynced) WAL and crash()+recover() replays them — releasing
+        # first would turn a manifest fault into silent data loss.
+        self.memtable.clear()
+        self.wal.truncate()
         if tel is not None:
             dur = time.perf_counter_ns() - t0
             tel.record("flush", dur)
@@ -520,7 +589,13 @@ class LSMStore:
         """
         if self._scheduler is None:
             return True
-        return self._scheduler.wait_for_quiesce(timeout)
+        try:
+            return self._scheduler.wait_for_quiesce(timeout)
+        except RuntimeError:
+            # the pipeline failure has now been surfaced to the caller;
+            # close() afterwards is an idempotent no-raise cleanup
+            self._bg_failure_surfaced = True
+            raise
 
     def close(self) -> None:
         """Drain and stop the background workers (async mode).
@@ -529,13 +604,30 @@ class LSMStore:
         synchronous flush/compaction path, which is state-equivalent.  Used
         by tests and benchmarks so short-lived stores don't accumulate
         parked worker threads.  No-op in sync mode.
+
+        On a failed/degraded pipeline, close() raises the background
+        failure the *first* time it is surfaced — but always completes the
+        full cleanup (worker shutdown + stranded-rotation fold-back) before
+        raising, and every subsequent close() is an idempotent no-raise
+        no-op (§16.3): the failure must be loud exactly once, never lost,
+        and never doubled.
         """
-        if self._scheduler is None:
+        sched = self._scheduler
+        if sched is None:
             return
+        surfaced = self._bg_failure_surfaced
         try:
-            self._scheduler.wait_for_quiesce()   # raises on a dead pipeline
+            sched.wait_for_quiesce()   # raises on a dead pipeline
+        except BaseException:
+            self._bg_failure_surfaced = True
+            if not surfaced:
+                raise                  # finally still completes the cleanup
         finally:
-            self._scheduler.shutdown()
+            # shutdown() joins the workers, so by the time the fold-back
+            # below runs no job can race the immutable queue — the failed
+            # job's error can never resurface from _consolidate_imm_wal
+            # with the scheduler already aborted.
+            sched.shutdown()
             self._scheduler = None
             if self._imm:
                 # A dead pipeline left rotated memtables stranded (the
@@ -544,8 +636,12 @@ class LSMStore:
                 # into the active WAL + memtable — durability and readable
                 # state unchanged.
                 self._consolidate_imm_wal()
+            # With the workers gone and every rotation folded back the
+            # store is loss-free on the synchronous path — degraded mode
+            # (a property of the dead background pipeline) ends here.
+            self._degraded = None
 
-    def _consolidate_imm_wal(self) -> None:
+    def _consolidate_imm_wal(self) -> int:
         """Fold the immutable queue's WAL segments into one active log.
 
         Segment concatenation (oldest first, active last) is record
@@ -556,7 +652,7 @@ class LSMStore:
         (including the unsynced tail — that is live process state, exactly
         what the active memtable held).  Shared by ``recover`` and the
         failed-pipeline ``close`` fold-back so the durability bookkeeping
-        cannot drift between them.
+        cannot drift between them.  Returns the number of records replayed.
         """
         wal = WriteAheadLog()
         buf = bytearray()
@@ -573,9 +669,12 @@ class LSMStore:
         self.memtable = Memtable(self.config.memtable_bytes,
                                  self.config.key_bytes,
                                  self.config.block_size)
+        n = 0
         for op, key, seq, value in self.wal.records():
+            n += 1
             self._seq = max(self._seq, seq)
             self.memtable.put(key, seq, None if op == 1 else value)
+        return n
 
     # --------------------------------------------------- background applies
     def _bg_flush(self, imm: ImmutableMemtable) -> Optional[CompactJob]:
@@ -594,6 +693,9 @@ class LSMStore:
             self._compact_until_quiet()
         if sched.aborting:
             return None     # crash in progress: imm stays queued for replay
+        f = self.config.faults
+        if f is not None:
+            f.check("flush_write")
         tel = self.config.telemetry
         t0 = tok = 0
         if tel is not None:
@@ -704,6 +806,9 @@ class LSMStore:
                            dst=task.dst_level, runs=len(srcs) + len(dsts))
         deepest = self._deepest_nonempty()
         drop_tombs = task.include_dst and task.dst_level >= deepest
+        f = self.config.faults
+        if f is not None:
+            f.check("compaction_merge")
         merged = merge_runs(srcs + dsts, self._bits_for_level(task.dst_level),
                             st, drop_tombstones=drop_tombs,
                             block_size=self.config.block_size,
@@ -737,6 +842,12 @@ class LSMStore:
     def _commit(self):
         st = self._stats.local()
         self.manifest.commit(self._levels, self._max_level, self._seq, st)
+        f = self.config.faults
+        if f is not None:
+            # after the in-memory commit, before durability: the edit is
+            # appended but not synced — exactly the window a real fsync
+            # failure leaves behind
+            f.check("manifest_fsync")
         self.manifest.fsync(st)
         with self._maint_lock:
             # The gc + retain + repin triplet must not interleave with a
@@ -861,7 +972,12 @@ class LSMStore:
         if tel is None:
             return self._get_impl(key, snapshot)
         t0 = time.perf_counter_ns()
-        out = self._get_impl(key, snapshot)
+        try:
+            out = self._get_impl(key, snapshot)
+        except CorruptionError as e:
+            tel.emit("corruption", run_id=e.run_id, block_id=e.block_id,
+                     where="get")
+            raise
         # thread-local histogram record: no locks on the lock-free read path
         tel.record("get", time.perf_counter_ns() - t0)
         return out
@@ -884,13 +1000,17 @@ class LSMStore:
                     hit = mt.get(int(key))
                     if hit is not None:
                         return hit[1]
-        use_bloom = self.config.bits_per_key > 0
+        cfg = self.config
+        use_bloom = cfg.bits_per_key > 0
+        paranoid = cfg.paranoid_checks
+        faults = cfg.faults
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if len(run) == 0:
                 continue
             st.runs_touched_point += 1
             found, value, _ = run.point_get(int(key), st, use_bloom,
-                                            cache=self.block_cache)
+                                            cache=self.block_cache,
+                                            paranoid=paranoid, faults=faults)
             if found:
                 return value
         return None
@@ -963,7 +1083,12 @@ class LSMStore:
         if tel is None:
             return self._multi_get_impl(keys, snapshot)
         t0 = time.perf_counter_ns()
-        out = self._multi_get_impl(keys, snapshot)
+        try:
+            out = self._multi_get_impl(keys, snapshot)
+        except CorruptionError as e:
+            tel.emit("corruption", run_id=e.run_id, block_id=e.block_id,
+                     where="multi_get")
+            raise
         tel.record("multi_get", time.perf_counter_ns() - t0)
         return out
 
@@ -990,7 +1115,10 @@ class LSMStore:
                     else:
                         keep.append(int(j))
                 pending = np.asarray(keep, dtype=np.int64)
-        use_bloom = self.config.bits_per_key > 0
+        cfg = self.config
+        use_bloom = cfg.bits_per_key > 0
+        paranoid = cfg.paranoid_checks
+        faults = cfg.faults
         probe_fn = self._bloom_probe_fn()
         for run in self._runs_newest_first(self._read_state(snapshot)):
             if pending.size == 0:
@@ -1000,7 +1128,7 @@ class LSMStore:
             st.runs_touched_point += int(pending.size)
             found, values = run.point_get_batch(
                 keys_arr[pending], st, use_bloom, probe_fn,
-                cache=self.block_cache)
+                cache=self.block_cache, paranoid=paranoid, faults=faults)
             if found.any():
                 for p in np.nonzero(found)[0]:
                     results[int(pending[p])] = values[int(p)]
@@ -1057,7 +1185,9 @@ class LSMStore:
             i = run.seek_idx(int(key))
             if i < len(run):
                 run._charge_block(run.block_of[i], st,
-                                  self.block_cache)
+                                  self.block_cache,
+                                  paranoid=self.config.paranoid_checks,
+                                  faults=self.config.faults)
                 k = int(run.keys[i])
                 if best is None or k < best:
                     best = k
@@ -1258,10 +1388,11 @@ class LSMStore:
         """
         if self._scheduler is not None:
             self._scheduler.abort_and_drain()
-        self.wal.crash()
+        f = self.config.faults
+        self.wal.crash(f)
         for imm in self._imm:
             imm.wal.crash()   # fully synced at rotation: keeps every byte
-        self.manifest.crash()
+        self.manifest.crash(f)
         self.memtable.clear()
 
     def recover(self):
@@ -1274,11 +1405,26 @@ class LSMStore:
         still recovers everything.  The scheduler survives recovery idle
         (its queue was drained by ``crash``) and resumes on the next
         rotation.
+
+        Integrity (DESIGN.md §16.2): the manifest tail is checksum-verified
+        (corrupt edits are popped back to the last good version — each was
+        itself a durable prefix), WAL replay stops at the first bad frame
+        and the log is truncated there, and every recovered run is scrubbed
+        *regardless of* ``paranoid_checks`` — a bad block raises
+        :class:`CorruptionError` so corruption is never served silently.
+        Recovery also clears degraded mode: the failed pipeline's state was
+        volatile.
         """
-        v = self.manifest.current()
+        tel = self.config.telemetry
+        v, popped = self.manifest.recover_current()
+        if popped and tel is not None:
+            tel.emit("corruption", run_id=-1, block_id=-1, where="manifest",
+                     popped_versions=popped)
         self._levels = v.runs(self.storage)
         self._max_level = v.max_level
         self._seq = v.last_seq
+        self._degraded = None
+        self._bg_failure_surfaced = False
         if self.block_cache is not None:
             # DRAM contents did not survive the crash; reload the pin set
             # from the recovered L0 (charged — these are real device reads)
@@ -1287,11 +1433,55 @@ class LSMStore:
             with self._maint_lock:
                 self.pinned_l0.repin(self._levels[0],
                                      stats=self._stats.local())
+        # Drop bytes past the last checksum-valid WAL frame before replay:
+        # a corrupt frame must not linger in the live log (new appends
+        # would land after it and be unreachable to the next replay).
+        wal_dropped = self.wal.repair()
+        if wal_dropped and tel is not None:
+            tel.emit("corruption", run_id=-1, block_id=-1, where="wal",
+                     dropped_bytes=wal_dropped)
         # Post-crash every surviving WAL byte is durable (crash truncated
         # each segment to its watermark), so consolidation + replay rebuilds
         # the memtable and advances _seq; with an empty immutable queue this
         # is exactly the old single-WAL replay.
-        self._consolidate_imm_wal()
+        replayed = self._consolidate_imm_wal()
+        if tel is not None:
+            tel.emit("wal_replay", records=replayed,
+                     bytes=len(self.wal._buf), dropped_bytes=wal_dropped)
+        report = self.scrub()
+        for r in report:
+            if r["bad_blocks"]:
+                raise CorruptionError(r["run_id"], r["bad_blocks"][0],
+                                      where="recovery scrub")
+
+    def scrub(self) -> List[dict]:
+        """Verify every run's block checksums; one report dict per run.
+
+        Each entry carries ``run_id``, ``level``, ``entries``, ``blocks``
+        and ``bad_blocks`` (empty list == clean).  Emits a ``scrub``
+        telemetry event (plus one ``corruption`` event per dirty run) but
+        does not raise — callers decide (recovery raises, operators may
+        quarantine).
+        """
+        tel = self.config.telemetry
+        t0 = time.perf_counter_ns() if tel is not None else 0
+        report: List[dict] = []
+        levels = self._levels
+        for li, lvl in enumerate(levels):
+            for run in lvl:
+                bad = run.verify()
+                report.append({"run_id": run.run_id, "level": li,
+                               "entries": len(run), "blocks": run.n_blocks,
+                               "bad_blocks": bad})
+                if bad and tel is not None:
+                    tel.emit("corruption", run_id=run.run_id,
+                             block_id=int(bad[0]), where="scrub",
+                             bad_blocks=len(bad))
+        if tel is not None:
+            tel.record("scrub", time.perf_counter_ns() - t0)
+            tel.emit("scrub", runs=len(report),
+                     bad_runs=sum(1 for r in report if r["bad_blocks"]))
+        return report
 
     # ------------------------------------- cross-shard migration (§15)
     # Three primitives used by ShardedLSMStore rebalancing.  All of them
@@ -1343,6 +1533,10 @@ class LSMStore:
         """
         if len(run) == 0:
             return
+        f = self.config.faults
+        if f is not None:
+            f.check("migration_import")  # before any mutation: a failed
+                                         # import leaves this store untouched
         self._seq = max(self._seq, int(run.seqs.max()))
         levels = [list(lvl) for lvl in self._levels]
         levels[0].append(run)          # newest-last, like flush
@@ -1362,6 +1556,10 @@ class LSMStore:
         becomes visible, so replayed memtable contents are in-range by
         invariant.
         """
+        f = self.config.faults
+        if f is not None:
+            f.check("migration_strip")   # before any mutation: the donor
+                                         # keeps its (already-copied) range
         lo64 = np.uint64(lo)
         dropped = 0
         changed = False

@@ -1,0 +1,292 @@
+"""Fault injection and end-to-end integrity primitives (DESIGN.md §16).
+
+Three things live here because everything else imports them:
+
+* **CRC32C** (Castagnoli) — the checksum used by every integrity frame in
+  the store: WAL record frames, ``SortedRun`` block checksums, and manifest
+  edit checksums.  ``crc32c`` is the scalar byte-loop oracle;
+  ``crc32c_rows`` is the vectorized twin (column-lockstep over byte
+  positions with active-length masks) used by the batched WAL append and
+  the run builder.  The two are property-tested bit-for-bit equal.
+  ``zlib.crc32`` is the *wrong* polynomial (CRC-32/ISO-HDLC), so the table
+  is built here from the reflected Castagnoli polynomial — no new deps.
+
+* **Typed failure exceptions** — :class:`InjectedFault` (a deliberately
+  injected I/O error), :class:`CorruptionError` (a checksum mismatch,
+  carrying ``run_id``/``block_id``), and :class:`StoreDegradedError`
+  (writes rejected because the store is in read-only degraded mode).
+
+* **FaultInjector** — the LevelDB ``fault_injection_test`` / mock-env
+  shape adapted to the in-memory durability model.  Attached via
+  ``LSMConfig.faults``; every durability/IO site calls
+  ``faults.check("<site>")`` (guarded by ``if faults is not None`` so the
+  ``faults=None`` default adds zero overhead).  Trigger modes: one-shot /
+  n-shot (``fail``), every-Nth (``fail_every``), probabilistic with a
+  seeded RNG (``fail_prob``).  Corruption modes arm state consumed at
+  ``crash()`` time (WAL tail, manifest last edit) or act immediately on a
+  sampled run block (``corrupt_run_block``).
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, Optional
+
+import numpy as np
+
+__all__ = [
+    "FAULT_SITES",
+    "CorruptionError",
+    "FaultInjector",
+    "InjectedFault",
+    "StoreDegradedError",
+    "crc32c",
+    "crc32c_rows",
+]
+
+# ---------------------------------------------------------------------------
+# CRC32C (Castagnoli, reflected polynomial 0x82F63B78)
+# ---------------------------------------------------------------------------
+
+def _build_table() -> np.ndarray:
+    poly = 0x82F63B78
+    table = np.empty(256, dtype=np.uint32)
+    for i in range(256):
+        crc = i
+        for _ in range(8):
+            crc = (crc >> 1) ^ poly if crc & 1 else crc >> 1
+        table[i] = crc
+    return table
+
+
+_TABLE = _build_table()
+_TABLE_LIST = [int(x) for x in _TABLE]  # plain ints: no numpy boxing in the scalar loop
+
+
+def crc32c(data: bytes) -> int:
+    """Scalar CRC-32C over ``data`` — the oracle for :func:`crc32c_rows`."""
+    crc = 0xFFFFFFFF
+    tab = _TABLE_LIST
+    for b in data:
+        crc = (crc >> 8) ^ tab[(crc ^ b) & 0xFF]
+    return crc ^ 0xFFFFFFFF
+
+
+def crc32c_rows(mat: np.ndarray, lens: np.ndarray) -> np.ndarray:
+    """Vectorized CRC-32C over the rows of a padded byte matrix.
+
+    ``mat`` is ``(n, L) uint8``; row ``i``'s message is ``mat[i, :lens[i]]``
+    (padding bytes beyond ``lens[i]`` never touch the checksum).  All rows
+    advance one byte position per pass, masked by their remaining length —
+    bit-for-bit equal to calling :func:`crc32c` per row.
+    """
+    mat = np.ascontiguousarray(mat, dtype=np.uint8)
+    n = mat.shape[0]
+    lens = np.asarray(lens, dtype=np.int64)
+    crc = np.full(n, 0xFFFFFFFF, dtype=np.uint32)
+    if n:
+        for j in range(mat.shape[1]):
+            active = lens > j
+            if not active.any():
+                break
+            step = (crc >> np.uint32(8)) ^ _TABLE[(crc ^ mat[:, j]) & np.uint32(0xFF)]
+            crc = np.where(active, step, crc)
+    return crc ^ np.uint32(0xFFFFFFFF)
+
+
+# ---------------------------------------------------------------------------
+# Typed failures
+# ---------------------------------------------------------------------------
+
+class InjectedFault(IOError):
+    """A deliberately injected fault at a named durability/IO site."""
+
+    def __init__(self, site: str):
+        super().__init__(f"injected fault at {site!r}")
+        self.site = site
+
+
+class CorruptionError(RuntimeError):
+    """A checksum mismatch detected on read, scrub, or recovery.
+
+    ``run_id``/``block_id`` locate a bad sorted-run block; WAL/manifest
+    corruption uses ``run_id=-1`` with a descriptive ``where``.
+    """
+
+    def __init__(self, run_id: int, block_id: int, where: str = "block"):
+        super().__init__(
+            f"corruption detected in {where} (run_id={run_id}, block_id={block_id})"
+        )
+        self.run_id = run_id
+        self.block_id = block_id
+        self.where = where
+
+
+class StoreDegradedError(RuntimeError):
+    """Writes rejected: the store is read-only after persistent background
+    failure.  Reads keep serving the committed tree; ``crash()`` +
+    ``recover()`` restores write service."""
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+#: Every instrumented durability/IO site (the crash-point matrix iterates this).
+FAULT_SITES = (
+    "wal_append",
+    "wal_fsync",
+    "manifest_fsync",
+    "block_read",
+    "compaction_merge",
+    "flush_write",
+    "migration_import",
+    "migration_strip",
+)
+
+
+class FaultInjector:
+    """Trigger injected failures and corruption at named sites.
+
+    Failure triggers (``check(site)`` raises :class:`InjectedFault`):
+
+    * ``fail(site, times=1)``   — fire on the next ``times`` hits (one-shot
+      by default; ``times=-1`` fires forever).
+    * ``fail_every(site, n)``   — fire on every Nth hit of the site.
+    * ``fail_prob(site, p)``    — fire with probability ``p`` per hit,
+      from the injector's seeded RNG (deterministic per seed).
+
+    Corruption arming (consumed by ``crash()`` paths):
+
+    * ``corrupt_wal_tail(mode)``      — ``"torn"`` keeps a random prefix of
+      the unsynced tail instead of dropping it all; ``"bitflip"`` /
+      ``"garbage"`` damage the *synced* buffer's last frame region so
+      recovery must checksum its way to the first bad frame.
+    * ``corrupt_manifest_edit()``     — damage the last manifest edit so
+      its checksum fails and recovery falls back one version.
+    * ``corrupt_run_block(run)``      — immediate: flip bytes inside a
+      sampled block of ``run`` and return its block id.
+
+    ``fired`` counts every triggered failure/corruption by site for test
+    assertions.  All randomness comes from one seeded RNG.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.rng = random.Random(seed)
+        self._times: Dict[str, int] = {}
+        self._every: Dict[str, int] = {}
+        self._hits: Dict[str, int] = {}
+        self._prob: Dict[str, float] = {}
+        self.fired: Dict[str, int] = {}
+        self.wal_tail_mode: Optional[str] = None   # None | torn | bitflip | garbage
+        self.manifest_corruption: bool = False
+
+    # -- arming -------------------------------------------------------------
+
+    def fail(self, site: str, times: int = 1) -> "FaultInjector":
+        self._times[site] = times
+        return self
+
+    def fail_every(self, site: str, n: int) -> "FaultInjector":
+        if n < 1:
+            raise ValueError("fail_every needs n >= 1")
+        self._every[site] = n
+        return self
+
+    def fail_prob(self, site: str, p: float) -> "FaultInjector":
+        self._prob[site] = float(p)
+        return self
+
+    def clear(self, site: Optional[str] = None) -> None:
+        if site is None:
+            self._times.clear()
+            self._every.clear()
+            self._prob.clear()
+        else:
+            self._times.pop(site, None)
+            self._every.pop(site, None)
+            self._prob.pop(site, None)
+
+    def corrupt_wal_tail(self, mode: str = "bitflip") -> "FaultInjector":
+        if mode not in ("torn", "bitflip", "garbage"):
+            raise ValueError(f"unknown WAL tail corruption mode {mode!r}")
+        self.wal_tail_mode = mode
+        return self
+
+    def corrupt_manifest_edit(self) -> "FaultInjector":
+        self.manifest_corruption = True
+        return self
+
+    # -- firing -------------------------------------------------------------
+
+    def _fired(self, site: str) -> None:
+        self.fired[site] = self.fired.get(site, 0) + 1
+        raise InjectedFault(site)
+
+    def check(self, site: str) -> None:
+        """Raise :class:`InjectedFault` if a trigger for ``site`` fires."""
+        t = self._times.get(site)
+        if t is not None and t != 0:
+            if t > 0:
+                self._times[site] = t - 1
+            self._fired(site)
+        n = self._every.get(site)
+        if n is not None:
+            h = self._hits.get(site, 0) + 1
+            self._hits[site] = h
+            if h % n == 0:
+                self._fired(site)
+        p = self._prob.get(site)
+        if p is not None and self.rng.random() < p:
+            self._fired(site)
+
+    # -- corruption helpers (called by crash()/tests) -----------------------
+
+    def mangle_wal_tail(self, buf: bytearray, synced_upto: int) -> int:
+        """Apply the armed WAL tail corruption to ``buf`` and return the
+        new buffer length to keep.  Consumes the armed mode."""
+        mode, self.wal_tail_mode = self.wal_tail_mode, None
+        if mode is None:
+            return synced_upto
+        self.fired["wal_tail:" + mode] = self.fired.get("wal_tail:" + mode, 0) + 1
+        if mode == "torn":
+            # a torn write: some prefix of the unsynced tail made it out
+            extra = len(buf) - synced_upto
+            return synced_upto + (self.rng.randrange(extra + 1) if extra > 0 else 0)
+        # bitflip / garbage damage bytes *within* the synced region's tail,
+        # so recovery cannot trust the length watermark and must checksum.
+        if synced_upto == 0:
+            return 0
+        lo = max(0, synced_upto - 32)
+        if mode == "bitflip":
+            pos = self.rng.randrange(lo, synced_upto)
+            buf[pos] ^= 1 << self.rng.randrange(8)
+        else:  # garbage
+            pos = self.rng.randrange(lo, synced_upto)
+            end = min(synced_upto, pos + 8)
+            for i in range(pos, end):
+                buf[i] = self.rng.randrange(256)
+        return synced_upto
+
+    def corrupt_run_block(self, run) -> int:
+        """Flip bytes inside a sampled block of ``run``; return the block id.
+
+        Prefers a value byte (payload corruption); for blocks holding only
+        tombstones / empty values, flips a sequence-number bit instead —
+        either way the per-block checksum stops matching.
+        """
+        if run.n_blocks == 0 or len(run) == 0:
+            raise ValueError("cannot corrupt an empty run")
+        bid = self.rng.randrange(run.n_blocks)
+        idx = np.nonzero(run.block_of == bid)[0]
+        if idx.size == 0:  # block spanned by a giant neighbouring entry
+            bid = int(run.block_of[self.rng.randrange(len(run))])
+            idx = np.nonzero(run.block_of == bid)[0]
+        e = int(idx[self.rng.randrange(idx.size)])
+        vlen = int(run.vlens[e])
+        if vlen > 0 and run.vals.ndim == 2 and run.vals.shape[1] > 0:
+            col = self.rng.randrange(vlen)
+            run.vals[e, col] ^= np.uint8(1 << self.rng.randrange(8))
+        else:
+            run.seqs[e] ^= np.uint64(1 << self.rng.randrange(40))
+        self.fired["corrupt_block"] = self.fired.get("corrupt_block", 0) + 1
+        return bid

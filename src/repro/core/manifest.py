@@ -8,11 +8,25 @@ the last durable version and never observes a half-applied compaction.
 from __future__ import annotations
 
 import dataclasses
+import struct
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .faults import crc32c
 from .run import SortedRun
 from .types import IOStats
+
+
+def _edit_checksum(version_id: int, levels: Tuple[Tuple[int, ...], ...],
+                   max_level: int, last_seq: int) -> int:
+    """CRC-32C over a version edit's canonical encoding (DESIGN.md §16.2):
+    ``<QQQ>(version_id, max_level, last_seq)`` then, per level,
+    ``<q>len`` followed by each run id as ``<q>``."""
+    parts = [struct.pack("<QQQ", version_id, max_level, last_seq)]
+    for lvl in levels:
+        parts.append(struct.pack("<q", len(lvl)))
+        parts.extend(struct.pack("<q", rid) for rid in lvl)
+    return crc32c(b"".join(parts))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -21,6 +35,12 @@ class Version:
     levels: Tuple[Tuple[int, ...], ...]  # run ids per level
     max_level: int
     last_seq: int
+    checksum: int = -1  # CRC-32C of the edit; -1 = legacy/unchecksummed
+
+    def verify(self) -> bool:
+        """True iff the stored edit checksum matches the fields."""
+        return self.checksum == _edit_checksum(
+            self.version_id, self.levels, self.max_level, self.last_seq)
 
     def runs(self, storage: "RunStorage") -> List[List[SortedRun]]:
         return [[storage.get(rid) for rid in lvl] for lvl in self.levels]
@@ -75,7 +95,8 @@ class Manifest:
         with self._mu:
             lv = tuple(tuple(self.storage.add(r) for r in lvl)
                        for lvl in levels)
-            v = Version(self._next_id, lv, max_level, last_seq)
+            v = Version(self._next_id, lv, max_level, last_seq,
+                        _edit_checksum(self._next_id, lv, max_level, last_seq))
             self._next_id += 1
             self._log.append(v)
             return v
@@ -143,12 +164,42 @@ class Manifest:
         with self._mu:
             return sum(self._pin_refs.values())
 
-    def crash(self):
-        """Lose versions past the fsync watermark (simulated crash)."""
+    def crash(self, faults=None):
+        """Lose versions past the fsync watermark (simulated crash).
+
+        An armed :class:`~repro.core.faults.FaultInjector` with
+        ``corrupt_manifest_edit()`` damages the last surviving edit
+        (garbles ``last_seq`` without updating its checksum), so recovery
+        must detect the mismatch and fall back one version.
+        """
         with self._mu:
             self._pinned.clear()  # reader pins are process state, not durable
             self._pin_refs.clear()
             self._log = self._log[: max(self._synced_upto, 1)]
+            if faults is not None and faults.manifest_corruption \
+                    and len(self._log) > 1:
+                faults.manifest_corruption = False
+                faults.fired["manifest_edit"] = \
+                    faults.fired.get("manifest_edit", 0) + 1
+                v = self._log[-1]
+                self._log[-1] = dataclasses.replace(
+                    v, last_seq=v.last_seq ^ (1 << 17))
+
+    def recover_current(self) -> Tuple[Version, int]:
+        """Newest checksum-valid version, popping any corrupt tail edits.
+
+        Every popped edit was itself a durable prefix of the manifest log,
+        so falling back one (or more) versions is prefix-consistent by
+        construction.  Version 0 (the empty tree) is the floor.  Returns
+        ``(version, n_popped)``.
+        """
+        with self._mu:
+            popped = 0
+            while len(self._log) > 1 and not self._log[-1].verify():
+                self._log.pop()
+                popped += 1
+            self._synced_upto = min(self._synced_upto, len(self._log))
+            return self._log[-1], popped
 
     def live_run_ids(self) -> List[int]:
         with self._mu:

@@ -13,12 +13,18 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .faults import crc32c, crc32c_rows
 from .run import SortedRun, build_run
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
                     TOMBSTONE_LEN, IOStats)
 
 _PUT, _DEL = 0, 1
-_HDR = struct.Struct("<BQQI")  # op, key, seq, vlen
+# WAL record frame (DESIGN.md §16.2): crc32c(4) | body(21) | payload(vlen)
+# where the checksum covers body+payload.  Recovery verifies every frame and
+# replays up to the first bad one — length fields are never trusted alone.
+_CRC = struct.Struct("<I")
+_HDR = struct.Struct("<BQQI")  # frame body: op, key, seq, vlen
+FRAME_OVERHEAD = _CRC.size + _HDR.size  # 25 bytes per record before payload
 # numpy twin of _HDR for vectorized batch appends (packed little-endian)
 _HDR_DTYPE = np.dtype([("op", "u1"), ("key", "<u8"),
                        ("seq", "<u8"), ("vlen", "<u4")])
@@ -33,7 +39,9 @@ class WriteAheadLog:
         self._synced_upto = 0
 
     def append(self, op: int, key: int, seq: int, value: bytes, stats: IOStats):
-        self._buf += _HDR.pack(op, key, seq, len(value))
+        body = _HDR.pack(op, key, seq, len(value))
+        self._buf += _CRC.pack(crc32c(body + value))
+        self._buf += body
         self._buf += value
         stats.wal_appends += 1
 
@@ -80,26 +88,41 @@ class WriteAheadLog:
         hdr["key"] = keys_arr
         hdr["seq"] = np.arange(first_seq, first_seq + n, dtype=np.uint64)
         hdr["vlen"] = vlens_arr
-        hsz = _HDR.size
+        fo, hsz = _CRC.size, _HDR.size
+        fsz = fo + hsz
         hview = hdr.view(np.uint8).reshape(n, hsz)
         payload = b"".join(v for v in values if v is not None)
         v0 = int(vlens_arr[0])
         if int(vlens_arr.min()) == v0 == int(vlens_arr.max()):
-            # uniform record size: interleave with one 2-D column copy
-            out = np.empty((n, hsz + v0), dtype=np.uint8)
-            out[:, :hsz] = hview
+            # uniform record size: interleave with one 2-D column copy, then
+            # checksum every frame body in one vectorized pass
+            out = np.empty((n, fsz + v0), dtype=np.uint8)
+            out[:, fo:fsz] = hview
             if v0:
-                out[:, hsz:] = np.frombuffer(payload, np.uint8).reshape(n, v0)
+                out[:, fsz:] = np.frombuffer(payload, np.uint8).reshape(n, v0)
+            crcs = crc32c_rows(out[:, fo:], np.full(n, hsz + v0, np.int64))
+            out[:, :fo] = crcs.astype("<u4").view(np.uint8).reshape(n, fo)
         else:
             cum = np.cumsum(vlens_arr, dtype=np.int64)
-            starts = np.arange(n, dtype=np.int64) * hsz + (cum - vlens_arr)
-            out = np.empty(n * hsz + int(cum[-1]), dtype=np.uint8)
-            out[(starts[:, None] + np.arange(hsz)).ravel()] = hview.ravel()
+            # checksum pass over a padded (body | payload) matrix, masked to
+            # each record's true frame-body length
+            body2d = np.zeros((n, hsz + int(vlens_arr.max())), dtype=np.uint8)
+            body2d[:, :hsz] = hview
             if payload:
                 flat = np.frombuffer(payload, dtype=np.uint8)
+                mask = np.arange(body2d.shape[1] - hsz)[None, :] \
+                    < np.asarray(vlens_arr)[:, None]
+                body2d[:, hsz:][mask] = flat
+            crcs = crc32c_rows(body2d, hsz + np.asarray(vlens_arr, np.int64))
+            crcb = crcs.astype("<u4").view(np.uint8).reshape(n, fo)
+            starts = np.arange(n, dtype=np.int64) * fsz + (cum - vlens_arr)
+            out = np.empty(n * fsz + int(cum[-1]), dtype=np.uint8)
+            out[(starts[:, None] + np.arange(fo)).ravel()] = crcb.ravel()
+            out[(starts[:, None] + fo + np.arange(hsz)).ravel()] = hview.ravel()
+            if payload:
                 intra = np.arange(flat.size, dtype=np.int64) \
                     - np.repeat(cum - vlens_arr, vlens_arr)
-                out[np.repeat(starts + hsz, vlens_arr) + intra] = flat
+                out[np.repeat(starts + fsz, vlens_arr) + intra] = flat
         self._buf += out.tobytes()
         stats.wal_appends += n
 
@@ -112,19 +135,80 @@ class WriteAheadLog:
         self._buf = bytearray()
         self._synced_upto = 0
 
-    def crash(self):
-        """Simulate a crash: unsynced suffix is lost."""
-        self._buf = self._buf[: self._synced_upto]
+    def crash(self, faults=None):
+        """Simulate a crash: unsynced suffix is lost.
+
+        With an armed :class:`~repro.core.faults.FaultInjector` the loss is
+        dirtier: ``torn`` keeps a random prefix of the unsynced tail (a torn
+        write that partially reached the device), ``bitflip``/``garbage``
+        damage bytes near the end of the *synced* region — recovery must
+        checksum its way to the first bad frame instead of trusting the
+        watermark.
+        """
+        keep = (self._synced_upto if faults is None
+                else faults.mangle_wal_tail(self._buf, self._synced_upto))
+        self._buf = self._buf[:keep]
+        self._synced_upto = min(self._synced_upto, len(self._buf))
+
+    def _scan_frames(self):
+        """Parse + verify frames: (metas, frame_offsets, good_end_offset).
+
+        ``metas[i]`` is (op, key, seq, vlen) for the i-th *checksum-valid*
+        frame; ``good_end_offset`` is the byte offset just past the last
+        valid frame (everything beyond is a torn tail or corruption).
+        Verification is one vectorized :func:`crc32c_rows` pass over a
+        padded frame-body matrix, not a per-record byte loop.
+        """
+        buf = bytes(self._buf)
+        fo, hsz = _CRC.size, _HDR.size
+        fsz = fo + hsz
+        n = len(buf)
+        metas, offs, stored = [], [], []
+        off = 0
+        while off + fsz <= n:
+            (crc,) = _CRC.unpack_from(buf, off)
+            op, key, seq, vlen = _HDR.unpack_from(buf, off + fo)
+            end = off + fsz + vlen
+            if end > n:
+                break  # torn tail (or a corrupt length running past the end)
+            metas.append((op, key, seq, vlen))
+            offs.append(off)
+            stored.append(crc)
+            off = end
+        if not metas:
+            return [], [], 0
+        vlens = np.fromiter((m[3] for m in metas), np.int64, len(metas))
+        arr = np.frombuffer(buf, np.uint8)
+        starts = np.fromiter(offs, np.int64, len(offs)) + fo
+        lens = hsz + vlens
+        cols = np.arange(hsz + int(vlens.max()), dtype=np.int64)
+        mask = cols[None, :] < lens[:, None]
+        mat = np.zeros((len(metas), cols.size), np.uint8)
+        mat[mask] = arr[(starts[:, None] + cols)[mask]]
+        ok = crc32c_rows(mat, lens) == np.fromiter(stored, np.uint32,
+                                                   len(stored))
+        good = len(metas) if bool(ok.all()) else int(np.argmin(ok))
+        end = (offs[good - 1] + fsz + metas[good - 1][3]) if good else 0
+        return metas[:good], offs[:good], end
+
+    def repair(self) -> int:
+        """Drop everything past the last checksum-valid frame (recovery
+        path); returns the number of bytes discarded."""
+        _, _, good_end = self._scan_frames()
+        dropped = len(self._buf) - good_end
+        if dropped:
+            self._buf = self._buf[:good_end]
+            self._synced_upto = min(self._synced_upto, good_end)
+        return dropped
 
     def records(self) -> Iterator[Tuple[int, int, int, bytes]]:
-        off, buf = 0, bytes(self._buf)
-        while off + _HDR.size <= len(buf):
-            op, key, seq, vlen = _HDR.unpack_from(buf, off)
-            off += _HDR.size
-            if off + vlen > len(buf):
-                break  # torn tail write
-            yield op, key, seq, buf[off:off + vlen]
-            off += vlen
+        """Replay checksum-valid records; stops at the first bad frame, so a
+        corrupt length field can never smuggle garbage past replay."""
+        metas, offs, _ = self._scan_frames()
+        buf, fsz = bytes(self._buf), _CRC.size + _HDR.size
+        for (op, key, seq, vlen), off in zip(metas, offs):
+            p = off + fsz
+            yield op, key, seq, buf[p:p + vlen]
 
     def __len__(self):
         return len(self._buf)

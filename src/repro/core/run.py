@@ -21,16 +21,36 @@ from typing import Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .bloom import BloomFilter
+from .faults import CorruptionError, crc32c_rows
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
                     TOMBSTONE_LEN, IOStats)
 
 _run_ids = itertools.count()
 
 
+def _entry_crcs(keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
+                vals: np.ndarray) -> np.ndarray:
+    """CRC-32C per entry over its canonical bytes (DESIGN.md §16.2):
+    key(8 LE) | seq(8 LE) | vlen(4 LE, signed — tombstones included) |
+    value[:max(vlen,0)].  One vectorized pass over a padded byte matrix."""
+    n = int(keys.size)
+    if n == 0:
+        return np.zeros(0, dtype=np.uint32)
+    vmax = vals.shape[1] if vals.ndim == 2 else 0
+    mat = np.zeros((n, 20 + vmax), dtype=np.uint8)
+    mat[:, 0:8] = keys.astype("<u8").view(np.uint8).reshape(n, 8)
+    mat[:, 8:16] = seqs.astype("<u8").view(np.uint8).reshape(n, 8)
+    mat[:, 16:20] = vlens.astype("<i4").view(np.uint8).reshape(n, 4)
+    if vmax:
+        mat[:, 20:] = vals
+    lens = 20 + np.maximum(vlens, 0).astype(np.int64)
+    return crc32c_rows(mat, lens)
+
+
 class SortedRun:
     __slots__ = ("run_id", "keys", "seqs", "vlens", "vals", "block_of",
                  "fence_keys", "n_blocks", "data_bytes", "block_size",
-                 "bloom", "level_hint", "_uniform_vals")
+                 "bloom", "level_hint", "block_crcs", "_uniform_vals")
 
     def __init__(self, keys: np.ndarray, seqs: np.ndarray, vlens: np.ndarray,
                  vals: np.ndarray, bits_per_key: float = 0.0,
@@ -56,8 +76,14 @@ class SortedRun:
             first_idx = np.searchsorted(self.block_of,
                                         np.arange(self.n_blocks), side="left")
             self.fence_keys = self.keys[first_idx]
+            # Per-block checksum = XOR of member-entry CRC-32Cs (§16.2):
+            # order-independent, so verification can recompute any single
+            # block without materializing its byte stream.
+            self.block_crcs = self._block_crcs_from(
+                _entry_crcs(self.keys, self.seqs, self.vlens, self.vals))
         else:
             self.fence_keys = np.zeros(0, dtype=KEY_DTYPE)
+            self.block_crcs = np.zeros(0, dtype=np.uint32)
         self.bloom = BloomFilter(self.keys, bits_per_key, hash_fn=hash_fn)
         self.level_hint = -1  # set by the manifest; informational
         self._uniform_vals = None  # lazy: every value full-width, no tombs?
@@ -96,18 +122,60 @@ class SortedRun:
             return self.data_bytes - block_id * self.block_size
         return self.block_size
 
-    def _charge_block(self, block_id: int, stats: IOStats, cache) -> None:
-        """One block touch: through the cache when present, else raw I/O."""
+    # ------------------------------------------------------------- integrity
+    def _block_crcs_from(self, entry_crcs: np.ndarray) -> np.ndarray:
+        """Fold per-entry CRCs into per-block checksums (XOR-reduce at each
+        block's first entry).  A block spanned entirely by a giant
+        neighbouring entry has no member entries; its checksum is 0."""
+        bounds = np.searchsorted(self.block_of, np.arange(self.n_blocks),
+                                 side="left")
+        crcs = np.bitwise_xor.reduceat(entry_crcs, bounds)
+        # reduceat yields entry_crcs[bounds[i]] for empty segments — fix up
+        nxt = np.append(bounds[1:], entry_crcs.size)
+        crcs[bounds == nxt] = 0
+        return crcs.astype(np.uint32)
+
+    def verify_block(self, block_id: int) -> bool:
+        """Recompute one block's checksum from its entries; True iff clean."""
+        sel = np.nonzero(self.block_of == block_id)[0]
+        if sel.size == 0:
+            return int(self.block_crcs[block_id]) == 0
+        fresh = _entry_crcs(self.keys[sel], self.seqs[sel],
+                            self.vlens[sel], self.vals[sel])
+        return int(np.bitwise_xor.reduce(fresh)) == int(self.block_crcs[block_id])
+
+    def verify(self) -> List[int]:
+        """Recompute every block checksum; returns the bad block ids
+        (empty list == run is clean).  Used by ``scrub()`` and recovery."""
+        if len(self) == 0:
+            return []
+        fresh = self._block_crcs_from(
+            _entry_crcs(self.keys, self.seqs, self.vlens, self.vals))
+        return np.nonzero(fresh != self.block_crcs)[0].tolist()
+
+    def _charge_block(self, block_id: int, stats: IOStats, cache,
+                      paranoid: bool = False, faults=None) -> None:
+        """One block touch: through the cache when present, else raw I/O.
+
+        ``faults`` fires the ``block_read`` injection site; ``paranoid``
+        re-verifies the block's checksum after the read and raises
+        :class:`CorruptionError` on a mismatch (``LSMConfig.paranoid_checks``).
+        """
+        if faults is not None:
+            faults.check("block_read")
         if cache is None:
             stats.blocks_read += 1
         else:
             cache.read_block(self.run_id, int(block_id),
                              self.block_bytes(int(block_id)), stats)
+        if paranoid and not self.verify_block(int(block_id)):
+            raise CorruptionError(self.run_id, int(block_id))
 
     # ----------------------------------------------------------------- reads
     def point_get(self, key: int, stats: IOStats,
-                  use_bloom: bool = True,
-                  cache=None) -> Tuple[bool, Optional[bytes], int]:
+                  use_bloom: bool = True, cache=None,
+                  paranoid: bool = False,
+                  faults=None) -> Tuple[bool, Optional[bytes], int]:
         """Returns (found, value_or_None_if_tombstone, seq).
 
         Cost model: one bloom probe (CPU), then one block read iff the bloom
@@ -124,7 +192,8 @@ class SortedRun:
             return False, None, -1  # no blocks to read
         i = int(np.searchsorted(self.keys, k))
         # fence pointers give the unique candidate block
-        self._charge_block(self.block_of[min(i, len(self) - 1)], stats, cache)
+        self._charge_block(self.block_of[min(i, len(self) - 1)], stats, cache,
+                           paranoid=paranoid, faults=faults)
         if i < len(self) and self.keys[i] == k:
             vlen = int(self.vlens[i])
             if vlen == TOMBSTONE_LEN:
@@ -134,7 +203,8 @@ class SortedRun:
         return False, None, -1
 
     def point_get_batch(self, keys: np.ndarray, stats: IOStats,
-                        use_bloom: bool = True, probe_fn=None, cache=None
+                        use_bloom: bool = True, probe_fn=None, cache=None,
+                        paranoid: bool = False, faults=None
                         ) -> Tuple[np.ndarray, List[Optional[bytes]]]:
         """Vectorized ``point_get`` over a batch of keys.
 
@@ -167,12 +237,19 @@ class SortedRun:
             return found, values
         # Fence pointers give each candidate its unique block: 1 read apiece.
         idx = np.searchsorted(self.keys, keys[cand])
+        blocks = self.block_of[np.minimum(idx, len(self) - 1)]
+        if faults is not None:
+            for _ in range(int(cand.size)):  # one injection check per read
+                faults.check("block_read")
         if cache is None:
             stats.blocks_read += int(cand.size)
         else:
-            cache.read_blocks(self.run_id,
-                              self.block_of[np.minimum(idx, len(self) - 1)]
-                              .tolist(), self.block_bytes, stats)
+            cache.read_blocks(self.run_id, blocks.tolist(),
+                              self.block_bytes, stats)
+        if paranoid:
+            for b in np.unique(blocks):
+                if not self.verify_block(int(b)):
+                    raise CorruptionError(self.run_id, int(b))
         inb = idx < len(self)
         hit = np.zeros(cand.size, dtype=bool)
         hit[inb] = self.keys[idx[inb]] == keys[cand][inb]

@@ -41,6 +41,7 @@ from __future__ import annotations
 import os
 import sys
 import threading
+import time
 import weakref
 from collections import deque
 from typing import Callable, Deque, Optional
@@ -90,10 +91,11 @@ def _pin_worker_to_spare_core(offset: int = 0) -> None:
 class FlushJob:
     """Turn one immutable memtable into an L0 run + version install."""
 
-    __slots__ = ("imm",)
+    __slots__ = ("imm", "retries")
 
     def __init__(self, imm: ImmutableMemtable):
         self.imm = imm
+        self.retries = 0
 
     def run(self, store) -> Optional["CompactJob"]:
         return store._bg_flush(self.imm)
@@ -113,10 +115,11 @@ class CompactJob:
     flush ahead of the next flush.
     """
 
-    __slots__ = ("last_task",)
+    __slots__ = ("last_task", "retries")
 
     def __init__(self):
         self.last_task = None
+        self.retries = 0
 
     def run(self, store) -> Optional["CompactJob"]:
         task = store._bg_compact_one()
@@ -233,15 +236,38 @@ class CompactionScheduler:
                             if not self._abort:
                                 cont = job.run(store)
             except BaseException as e:    # worker must survive a failed job:
-                tel = store.config.telemetry if store is not None else None
-                if tel is not None:
-                    tel.emit("bg_failure", job=type(job).__name__,
-                             error=repr(e))
-                with self._cv:            # a dead consumer would deadlock
-                    if self._failure is None:   # writers at the stall trigger
-                        self._failure = e
-                    self._queue.clear()   # nothing will drain; idle() goes
-                                          # True so stalled writers escape
+                cfg = store.config if store is not None else None
+                tel = cfg.telemetry if cfg is not None else None
+                job.retries += 1
+                if cfg is not None and job.retries <= cfg.bg_max_retries \
+                        and not self._abort and not self._stop:
+                    # graceful degradation, stage 1 (§16.3): transient
+                    # failures get bounded exponential backoff, then the
+                    # same job re-runs from the front of the queue (its
+                    # turnstile slot — determinism order is preserved)
+                    store._stats.local().bg_retries += 1
+                    if tel is not None:
+                        tel.emit("bg_retry", job=type(job).__name__,
+                                 attempt=job.retries, error=repr(e))
+                    time.sleep(min(0.001 * (1 << (job.retries - 1)), 0.05))
+                    with self._cv:
+                        self._queue.appendleft(job)
+                else:
+                    # stage 2: retry budget exhausted — poison the pipeline
+                    # and flip the store read-only (writes raise
+                    # StoreDegradedError; reads keep serving)
+                    if store is not None:
+                        store._stats.local().bg_gave_up += 1
+                    if tel is not None:
+                        tel.emit("bg_failure", job=type(job).__name__,
+                                 error=repr(e), retries=job.retries - 1)
+                    with self._cv:        # a dead consumer would deadlock
+                        if self._failure is None:   # writers at the stall
+                            self._failure = e       # trigger escape
+                        self._queue.clear()  # nothing will drain; idle()
+                                             # goes True
+                    if store is not None:
+                        store._enter_degraded(e)
             finally:
                 store = None   # don't root the store across the idle wait
                 with self._cv:

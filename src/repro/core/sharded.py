@@ -937,6 +937,30 @@ class ShardedLSMStore:
             ok = s.wait_for_quiesce(left) and ok
         return ok
 
+    # ------------------------------------------------- integrity (§16)
+    @property
+    def degraded(self) -> bool:
+        """True when any shard is read-only after persistent background
+        failure.  Degradation is per-shard: writes routed to a degraded
+        shard raise ``StoreDegradedError`` while every other shard keeps
+        accepting writes, and reads keep serving everywhere."""
+        return any(s.degraded for s in self.shards)
+
+    def degraded_shards(self) -> List[int]:
+        """Indices of read-only shards (empty list == fully writable)."""
+        return [si for si, s in enumerate(self.shards) if s.degraded]
+
+    def scrub(self) -> List[dict]:
+        """Verify block checksums across every shard's runs; per-run report
+        dicts (shard-tagged) in shard order — the facade twin of
+        ``LSMStore.scrub``."""
+        report: List[dict] = []
+        for si, s in enumerate(self.shards):
+            for r in s.scrub():
+                r["shard"] = si
+                report.append(r)
+        return report
+
     # ---------------------------------------------------------------- info
     @property
     def stats(self) -> IOStats:

@@ -57,7 +57,7 @@ __all__ = ["LatencyHistogram", "EventTrace", "TraceEvent", "Telemetry",
 # their own classes; the Telemetry facade accepts any string key).
 OP_CLASSES = ("get", "multi_get", "put", "put_batch", "write_batch",
               "scan", "seek", "flush", "compaction", "view_rebuild",
-              "wal_fsync", "stall", "rebalance")
+              "wal_fsync", "stall", "rebalance", "scrub")
 
 _SQRT2 = math.sqrt(2.0)
 # Octaves 0..42 cover 1 ns .. 2^42 ns (~73 min) at 2 buckets/octave;

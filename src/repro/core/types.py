@@ -64,6 +64,10 @@ class IOStats:
     view_scans: int = 0           # range reads served by a range view
     view_fallbacks: int = 0       # view-eligible reads served by the
                                   # merging iterator (view stale mid-churn)
+    bg_retries: int = 0           # background jobs re-run after a failure
+                                  # (bounded exponential backoff, §16.3)
+    bg_gave_up: int = 0           # background jobs abandoned after the
+                                  # retry budget — store degrades read-only
 
     def write_amplification(self) -> float:
         """Average number of times each flushed byte was rewritten."""

@@ -156,9 +156,11 @@ def test_write_batch_fsync_coalescing_counts():
 def test_torn_batch_tail_recovery():
     """A partially synced batch recovers exactly the records that fit the
     fsync watermark; the torn record and everything after are lost."""
+    from repro.core.memtable import FRAME_OVERHEAD
+
     db = LSMStore(small_cfg(memtable_bytes=1 << 20))
     db.put_batch(list(range(50)), b"v" * 10)
-    rec = 21 + 10                    # header + payload bytes per record
+    rec = FRAME_OVERHEAD + 10        # frame (crc+header) + payload per record
     db.wal._synced_upto = 7 * rec + 13   # cut mid-record 7
     db.crash()
     db.recover()
