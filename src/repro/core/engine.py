@@ -195,9 +195,12 @@ class LSMStore:
         # then raise StoreDegradedError; reads keep serving the committed
         # tree (no lock — a single attribute test on the write path).
         self._degraded: Optional[BaseException] = None
-        # Set once the pipeline failure has been surfaced to a caller
-        # (wait_for_quiesce / submit); close() on such a store is an
-        # idempotent, loss-free no-raise cleanup instead of a second raise.
+        # Set once the root pipeline failure has been surfaced to a caller
+        # through wait_for_quiesce (close() raises via the same call);
+        # close() afterwards is an idempotent, loss-free no-raise cleanup
+        # instead of a second raise.  Write-path StoreDegradedError is a
+        # *rejection*, not the surfacing — it can fire many times without
+        # consuming the one loud raise of the underlying failure.
         self._bg_failure_surfaced = False
         self._pallas_probe_fn = _UNSET  # lazy: resolved on first multi_get
         self._pallas_hash_fn = _UNSET   # lazy: resolved on first filter build
@@ -531,7 +534,26 @@ class LSMStore:
                                  self.config.key_bytes,
                                  self.config.block_size)
         self.wal = WriteAheadLog()
-        self._scheduler.submit(FlushJob(imm))
+        try:
+            self._scheduler.submit(FlushJob(imm))
+        except RuntimeError as exc:
+            # Raced the worker poisoning the pipeline: this rotation's write
+            # passed the _degraded check an instant before the failure was
+            # published.  The write is ACCEPTED, not rejected — its record
+            # is already in the rotated segment (appended + fsynced above)
+            # and stays readable from the immutable queue; the flush will
+            # never run, but close() folds the queue back into the sync
+            # path and crash()+recover() replays the fsynced WAL, so
+            # nothing acknowledged is lost.  Raising here would reject a
+            # write that is already durable state.  The *next* write gets
+            # the clean StoreDegradedError from the _degraded fast check:
+            # the worker sets that flag before publishing the failure
+            # submit() just saw, so it is guaranteed visible by now.  A
+            # cause-less RuntimeError is "scheduler is shut down" — a
+            # lifecycle error, not degradation — and propagates unchanged.
+            if exc.__cause__ is None:
+                raise
+            self._enter_degraded(exc.__cause__)
 
     def _throttle(self):
         """LevelDB-style write-pressure control at rotation points.

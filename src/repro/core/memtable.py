@@ -30,6 +30,35 @@ _HDR_DTYPE = np.dtype([("op", "u1"), ("key", "<u8"),
                        ("seq", "<u8"), ("vlen", "<u4")])
 assert _HDR_DTYPE.itemsize == _HDR.size
 
+# Cap on the transient padded scratch matrix the vectorized CRC passes
+# allocate: a batch (or WAL replay) mixing many small records with one
+# outlier-length value must not allocate n*max bytes at once (100k records
+# next to a single 4KB value would be ~400MB of padding — and the replay
+# gather's int64 index intermediate is 8x that again).  Per-span scratch is
+# ~10x this cap; spans stay large enough that the vectorized pass keeps its
+# throughput.
+_CRC_PAD_BUDGET = 1 << 20
+
+
+def _pad_spans(vlens: np.ndarray, hsz: int):
+    """Row spans ``(i, j)`` for a bounded-memory padded CRC pass.
+
+    Each span keeps ``(j-i) * (hsz + vlens[i:j].max())`` under
+    :data:`_CRC_PAD_BUDGET` (a record wider than the whole budget gets a
+    span of its own — that width is the record itself, not padding).  The
+    width is taken over a bounded lookahead window, so uniform stretches
+    keep large vectorized spans and an outlier only shrinks the spans that
+    actually contain it.
+    """
+    n = len(vlens)
+    i = 0
+    while i < n:
+        look = min(n, i + 65536)
+        width = hsz + int(vlens[i:look].max())
+        j = min(look, i + max(1, _CRC_PAD_BUDGET // width))
+        yield i, j
+        i = j
+
 
 class WriteAheadLog:
     """Append-only log; ``records()`` replays committed entries on recovery."""
@@ -103,26 +132,32 @@ class WriteAheadLog:
             crcs = crc32c_rows(out[:, fo:], np.full(n, hsz + v0, np.int64))
             out[:, :fo] = crcs.astype("<u4").view(np.uint8).reshape(n, fo)
         else:
-            cum = np.cumsum(vlens_arr, dtype=np.int64)
-            # checksum pass over a padded (body | payload) matrix, masked to
-            # each record's true frame-body length
-            body2d = np.zeros((n, hsz + int(vlens_arr.max())), dtype=np.uint8)
-            body2d[:, :hsz] = hview
-            if payload:
-                flat = np.frombuffer(payload, dtype=np.uint8)
-                mask = np.arange(body2d.shape[1] - hsz)[None, :] \
-                    < np.asarray(vlens_arr)[:, None]
-                body2d[:, hsz:][mask] = flat
-            crcs = crc32c_rows(body2d, hsz + np.asarray(vlens_arr, np.int64))
+            vl = np.asarray(vlens_arr, np.int64)
+            cum = np.cumsum(vl, dtype=np.int64)
+            pstarts = cum - vl
+            flat = np.frombuffer(payload, dtype=np.uint8)
+            # checksum pass over padded (body | payload) matrices, masked to
+            # each record's true frame-body length; _pad_spans bounds the
+            # padded scratch so one outlier-length record never inflates
+            # the transient allocation to n*max bytes
+            crcs = np.empty(n, np.uint32)
+            for i, j in _pad_spans(vl, hsz):
+                w = int(vl[i:j].max())
+                body = np.zeros((j - i, hsz + w), dtype=np.uint8)
+                body[:, :hsz] = hview[i:j]
+                if w:
+                    mask = np.arange(w)[None, :] < vl[i:j, None]
+                    body[:, hsz:][mask] = flat[pstarts[i]:cum[j - 1]]
+                crcs[i:j] = crc32c_rows(body, hsz + vl[i:j])
             crcb = crcs.astype("<u4").view(np.uint8).reshape(n, fo)
-            starts = np.arange(n, dtype=np.int64) * fsz + (cum - vlens_arr)
+            starts = np.arange(n, dtype=np.int64) * fsz + pstarts
             out = np.empty(n * fsz + int(cum[-1]), dtype=np.uint8)
             out[(starts[:, None] + np.arange(fo)).ravel()] = crcb.ravel()
             out[(starts[:, None] + fo + np.arange(hsz)).ravel()] = hview.ravel()
             if payload:
                 intra = np.arange(flat.size, dtype=np.int64) \
-                    - np.repeat(cum - vlens_arr, vlens_arr)
-                out[np.repeat(starts + fsz, vlens_arr) + intra] = flat
+                    - np.repeat(pstarts, vl)
+                out[np.repeat(starts + fsz, vl) + intra] = flat
         self._buf += out.tobytes()
         stats.wal_appends += n
 
@@ -181,12 +216,17 @@ class WriteAheadLog:
         arr = np.frombuffer(buf, np.uint8)
         starts = np.fromiter(offs, np.int64, len(offs)) + fo
         lens = hsz + vlens
-        cols = np.arange(hsz + int(vlens.max()), dtype=np.int64)
-        mask = cols[None, :] < lens[:, None]
-        mat = np.zeros((len(metas), cols.size), np.uint8)
-        mat[mask] = arr[(starts[:, None] + cols)[mask]]
-        ok = crc32c_rows(mat, lens) == np.fromiter(stored, np.uint32,
-                                                   len(stored))
+        stored_a = np.fromiter(stored, np.uint32, len(stored))
+        ok = np.empty(len(metas), bool)
+        # spans bound the padded gather matrix (see _pad_spans): replaying a
+        # WAL mixing small records with one huge value must not allocate
+        # n*max bytes of padding
+        for i, j in _pad_spans(vlens, hsz):
+            cols = np.arange(int(lens[i:j].max()), dtype=np.int64)
+            mask = cols[None, :] < lens[i:j, None]
+            mat = np.zeros((j - i, cols.size), np.uint8)
+            mat[mask] = arr[(starts[i:j, None] + cols)[mask]]
+            ok[i:j] = crc32c_rows(mat, lens[i:j]) == stored_a[i:j]
         good = len(metas) if bool(ok.all()) else int(np.argmin(ok))
         end = (offs[good - 1] + fsz + metas[good - 1][3]) if good else 0
         return metas[:good], offs[:good], end

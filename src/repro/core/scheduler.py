@@ -256,18 +256,23 @@ class CompactionScheduler:
                     # stage 2: retry budget exhausted — poison the pipeline
                     # and flip the store read-only (writes raise
                     # StoreDegradedError; reads keep serving)
-                    if store is not None:
-                        store._stats.local().bg_gave_up += 1
                     if tel is not None:
                         tel.emit("bg_failure", job=type(job).__name__,
                                  error=repr(e), retries=job.retries - 1)
+                    if store is not None:
+                        store._stats.local().bg_gave_up += 1
+                        # Degrade BEFORE publishing the failure: a writer
+                        # that passed the store's _degraded check must not
+                        # be the first to find the dead pipeline — submit()
+                        # can only start refusing after the degraded flag
+                        # is visible, and _rotate translates the residual
+                        # window into the same StoreDegradedError.
+                        store._enter_degraded(e)
                     with self._cv:        # a dead consumer would deadlock
                         if self._failure is None:   # writers at the stall
                             self._failure = e       # trigger escape
                         self._queue.clear()  # nothing will drain; idle()
                                              # goes True
-                    if store is not None:
-                        store._enter_degraded(e)
             finally:
                 store = None   # don't root the store across the idle wait
                 with self._cv:

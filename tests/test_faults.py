@@ -519,6 +519,49 @@ def test_degraded_close_is_idempotent_and_loss_free():
     assert db.get(KEY_SPACE + 3) == b"sync path"
 
 
+def test_rotate_losing_degradation_race_accepts_the_write():
+    """Deterministic replay of the submit/degradation race: the worker
+    publishes the pipeline failure in the instant between a writer passing
+    the _degraded check and its rotation reaching submit().  The racing
+    write must be ACCEPTED — its rotated segment is already fsynced and
+    readable — never surfaced as the scheduler's plain RuntimeError; the
+    next write gets the typed StoreDegradedError, and close() stays loud
+    once, idempotent, and loss-free."""
+    db = LSMStore(cfg(async_compaction=True))
+    sched = db._scheduler
+    real_submit = sched.submit
+    boom = RuntimeError("simulated background job failure")
+
+    def racing_submit(job):
+        # what the worker's give-up path does, interleaved at the worst
+        # possible instant: degraded flag first, then the failure submit()
+        # checks — so the rotation in flight sees a dead pipeline
+        db._enter_degraded(boom)
+        with sched._cv:
+            if sched._failure is None:
+                sched._failure = boom
+        return real_submit(job)
+
+    sched.submit = racing_submit
+    applied = []
+    i = 0
+    while not db.degraded:
+        v = bytes([97 + i % 26]) * 50
+        db.put(i % KEY_SPACE, v)      # the rotating put must not raise
+        applied.append((i % KEY_SPACE, v))
+        i += 1
+        assert i < 10_000, "memtable never rotated"
+    sched.submit = real_submit
+    with pytest.raises(StoreDegradedError):
+        db.put(0, b"rejected")        # typed, before any mutation
+    with pytest.raises(RuntimeError, match="background"):
+        db.close()                    # loud exactly once
+    db.close()                        # then idempotent
+    assert db._scheduler is None
+    # loss-free: every acknowledged write (racing one included) serves
+    assert db_view(db) == oracle_view(applied, len(applied))
+
+
 def test_sharded_degradation_is_per_shard():
     """The facade degrades shard-by-shard: a dead pipeline in one shard
     rejects only that shard's writes while siblings keep full service."""

@@ -204,6 +204,45 @@ def test_wal_append_batch_bytes_match_scalar_appends():
     assert bytes(w_scalar2._buf) == bytes(w_batch2._buf)
 
 
+def test_wal_outlier_length_batch_spans_stay_bounded_and_bit_exact():
+    """A batch mixing many small records with a few huge values must not
+    build one n*max padded CRC matrix: the pass splits into bounded spans
+    (each under the scratch budget) and stays byte-identical to scalar
+    appends — including replay through the same spanned verification."""
+    from repro.core.memtable import (WriteAheadLog, _CRC_PAD_BUDGET, _HDR,
+                                     _pad_spans)
+
+    rng = np.random.default_rng(11)
+    items = []
+    for i in range(3000):
+        if i % 500 == 250:               # scattered 4KB outliers
+            items.append((i, bytes(rng.integers(0, 256, 4096, np.uint8))))
+        elif i % 9 == 0:
+            items.append((i, None))
+        else:
+            items.append((i, bytes(rng.integers(0, 256,
+                                                int(rng.integers(0, 32)),
+                                                np.uint8))))
+    w_scalar, w_batch = WriteAheadLog(), WriteAheadLog()
+    s = IOStats()
+    for i, (k, v) in enumerate(items):
+        w_scalar.append(1 if v is None else 0, k, 7 + i, v or b"", s)
+    w_batch.append_batch(items, 7, s)
+    assert bytes(w_scalar._buf) == bytes(w_batch._buf)
+    assert list(w_scalar.records()) == list(w_batch.records())
+    # the span generator's bound: rows * padded-width <= budget, except a
+    # single row wider than the whole budget (the record itself, not padding)
+    vlens = np.array([len(v) if v is not None else 0 for _, v in items],
+                     np.int64)
+    spans = list(_pad_spans(vlens, _HDR.size))
+    assert len(spans) > 1                 # the outliers force a split
+    assert spans[0][0] == 0 and spans[-1][1] == len(items)
+    for (i, j), (i2, _) in zip(spans, spans[1:] + [(len(items), None)]):
+        assert j == i2                    # contiguous, gap-free cover
+        w = _HDR.size + int(vlens[i:j].max())
+        assert (j - i) * w <= _CRC_PAD_BUDGET or j - i == 1
+
+
 # ------------------------------------------------------- vectorized merges
 def make_run(seed: int, n: int, key_space: int = 3000, vmax: int = 24,
              tomb: float = 0.15, seq0: int = 0):
