@@ -23,6 +23,7 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
             shard_key_space: Optional[int] = None,
             use_range_views: bool = False,
             telemetry=None,
+            tuner=None,
             rebalance_interval_ops: int = 0,
             rebalance_ratio: float = 2.0) -> LSMStore:
     """OptimizeForSmallDb-flavoured config (paper §4.2), scaled down with the
@@ -35,7 +36,9 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
     balance under the default full-uint64 splitters; ``telemetry`` attaches
     a ``repro.core.Telemetry`` facade (DESIGN.md §14) for latency
     histograms + event tracing (None keeps the zero-overhead disabled
-    path — the default for every existing lane);
+    path — the default for every existing lane); ``tuner`` attaches a
+    ``repro.core.OnlineTuner`` feedback controller (DESIGN.md §17 —
+    requires ``telemetry`` for its objective sensor);
     ``rebalance_interval_ops``/``rebalance_ratio`` enable dynamic shard
     rebalancing under skew (DESIGN.md §15; 0 keeps static splitters)."""
     splitters = None
@@ -56,6 +59,7 @@ def make_db(policy: str = "garnering", c: float = 0.8, T: float = 2.0,
         shard_splitters=splitters,
         use_range_views=use_range_views,
         telemetry=telemetry,
+        tuner=tuner,
         rebalance_interval_ops=rebalance_interval_ops,
         rebalance_ratio=rebalance_ratio))
 

@@ -20,11 +20,18 @@ def run(n: int = DEFAULT_N // 2) -> List[Dict]:
             db = make_db(c=c, T=T)
             t_write = fill_random(db, n, 100)
             t_range = seek_random(db, max(n // 8, 500), n * 8, nexts=10)
+            # Eq. 6 wants the data volume N in bytes: measure the on-disk
+            # per-entry footprint from the store's own flush accounting
+            # (bytes/entry actually written, i.e. key + metadata + value)
+            # instead of hardcoding this run's value size.
+            st = db.stats
+            footprint = (st.bytes_flushed / st.entries_flushed
+                         if st.entries_flushed else 0.0)
             rows.append(dict(T=T, c=c, levels=db.num_levels_in_use,
                              fillrandom_us=t_write, seeknext10_us=t_range,
                              write_amp=db.stats.write_amplification(),
                              predicted_L=db.policy.predicted_levels(
-                                 db.total_entries * 116,
+                                 int(db.total_entries * footprint),
                                  db.config.base_level_bytes)))
     return rows
 

@@ -140,35 +140,54 @@ def run_serving(clients: int, seconds: float, n_preload: int,
 
 
 # ---------------------------------------------------------- tail attribution
-def _event_intervals(trace) -> Dict[str, List[Tuple[int, int]]]:
-    """Merged (t0, t1) interval lists per attributable event kind.
+class IntervalCollector:
+    """Incremental (t0, t1) interval index per attributable event kind.
 
     End events carry ``t0``/``dur_ns`` (DESIGN.md §14), so intervals come
     from single records: flush_end, compaction_end, stall_exit/slowdown
-    (grouped as "stall"), view_rebuild."""
-    kind_map = {"flush_end": "flush", "compaction_end": "compaction",
-                "stall_exit": "stall", "slowdown": "stall",
-                "view_rebuild": "view_rebuild",
-                "rebalance_end": "rebalance"}
-    raw: Dict[str, List[Tuple[int, int]]] = {k: [] for k in ATTRIB_KINDS}
-    for e in trace.dump():
-        kind = kind_map.get(e.kind)
-        if kind is None:
-            continue
-        iv = e.interval()
-        if iv is not None:
-            raw[kind].append(iv)
-    merged: Dict[str, List[Tuple[int, int]]] = {}
-    for kind, ivs in raw.items():
-        ivs.sort()
-        out: List[List[int]] = []
-        for s, e in ivs:
-            if out and s <= out[-1][1]:
-                out[-1][1] = max(out[-1][1], e)
-            else:
-                out.append([s, e])
-        merged[kind] = [(s, e) for s, e in out]
-    return merged
+    (grouped as "stall"), view_rebuild.  ``consume(trace)`` pulls only the
+    records appended since the last call (``EventTrace.since`` cursor —
+    the Telemetry windowed-delta API, §17) and folds them into the sorted
+    merged lists, so a long-running server can re-attribute tails each
+    reporting window without re-scanning and re-merging the full trace
+    history every tick."""
+
+    _KIND_MAP = {"flush_end": "flush", "compaction_end": "compaction",
+                 "stall_exit": "stall", "slowdown": "stall",
+                 "view_rebuild": "view_rebuild",
+                 "rebalance_end": "rebalance"}
+
+    def __init__(self):
+        self._cursor = 0
+        self._merged: Dict[str, List[Tuple[int, int]]] = \
+            {k: [] for k in ATTRIB_KINDS}
+
+    def consume(self, trace) -> Dict[str, List[Tuple[int, int]]]:
+        """Fold events appended since the last consume; returns the merged
+        interval lists (sorted, disjoint) per kind."""
+        events, self._cursor = trace.since(self._cursor)
+        fresh: Dict[str, List[Tuple[int, int]]] = {}
+        for e in events:
+            kind = self._KIND_MAP.get(e.kind)
+            if kind is None:
+                continue
+            iv = e.interval()
+            if iv is not None:
+                fresh.setdefault(kind, []).append(iv)
+        for kind, ivs in fresh.items():
+            ivs.sort()
+            out: List[List[int]] = [list(t) for t in self._merged[kind]]
+            for s, e in ivs:
+                i = bisect.bisect_left([x[0] for x in out], s)
+                out.insert(i, [s, e])
+            merged: List[List[int]] = []
+            for s, e in out:
+                if merged and s <= merged[-1][1]:
+                    merged[-1][1] = max(merged[-1][1], e)
+                else:
+                    merged.append([s, e])
+            self._merged[kind] = [(s, e) for s, e in merged]
+        return self._merged
 
 
 def _overlaps(starts: List[int], ends: List[int], s: int, e: int) -> bool:
@@ -177,12 +196,15 @@ def _overlaps(starts: List[int], ends: List[int], s: int, e: int) -> bool:
     return i >= 0 and ends[i] >= s
 
 
-def attribute_tails(t_pool, d_pool, trace) -> Dict[str, Dict[str, float]]:
+def attribute_tails(t_pool, d_pool, trace,
+                    collector: Optional[IntervalCollector] = None
+                    ) -> Dict[str, Dict[str, float]]:
     """For each op class: % of tail samples (>= exact p99) overlapping each
     background event kind (overlaps are not exclusive — a sample slow under
     both a flush and a compaction counts toward both; "none" = overlapped
-    nothing attributable)."""
-    intervals = _event_intervals(trace)
+    nothing attributable).  Pass a long-lived ``collector`` to attribute
+    repeatedly against a growing trace at incremental cost."""
+    intervals = (collector or IntervalCollector()).consume(trace)
     cols = {k: (list(map(lambda iv: iv[0], ivs)),
                 list(map(lambda iv: iv[1], ivs)))
             for k, ivs in intervals.items()}

@@ -13,6 +13,8 @@ Public API:
     FaultInjector, crc32c, ...    — fault injection + end-to-end checksums
                                     (§16): CorruptionError / InjectedFault /
                                     StoreDegradedError typed failures
+    OnlineTuner, KNOB_BOUNDS,
+    tuning_objective              — online workload-adaptive tuning (§17)
 """
 from .bloom import (BloomFilter, allocate_fprs, bits_for_fpr,
                     garnering_theoretical_fprs, theoretical_fpr,
@@ -30,7 +32,10 @@ from .run import SortedRun, build_run, merge_runs, merge_runs_scalar
 from .scheduler import CompactionScheduler
 from .sharded import (ShardedLSMStore, ShardedSnapshot, make_store,
                       uniform_splitters)
-from .telemetry import (EventTrace, LatencyHistogram, Telemetry, TraceEvent)
+from .telemetry import (EventTrace, LatencyHistogram, Telemetry,
+                        TelemetrySnapshot, TelemetryWindow, TraceEvent)
+from .tuner import (KNOB_BOUNDS, FOREGROUND_OPS, OnlineTuner, TunerStep,
+                    tuning_objective)
 from .types import BLOCK_SIZE, KEY_BYTES, IOStats, StatsHub
 from .view import RangeView, build_range_view
 
@@ -47,6 +52,9 @@ __all__ = [
     "SortedRun", "build_run", "merge_runs", "merge_runs_scalar",
     "RangeView", "build_range_view",
     "Telemetry", "LatencyHistogram", "EventTrace", "TraceEvent", "StatsHub",
+    "TelemetrySnapshot", "TelemetryWindow",
+    "OnlineTuner", "TunerStep", "KNOB_BOUNDS", "FOREGROUND_OPS",
+    "tuning_objective",
     "FAULT_SITES", "FaultInjector", "InjectedFault", "CorruptionError",
     "StoreDegradedError", "crc32c", "crc32c_rows",
     "BLOCK_SIZE", "KEY_BYTES",

@@ -289,6 +289,17 @@ class BlockCache:
         self._drop_entry(next(iter(nsk)))
         return True
 
+    # --------------------------------------------------------------- resizing
+    def resize(self, capacity_bytes: int) -> None:
+        """Gentle budget change (the online tuner's cache↔pin actuator,
+        DESIGN.md §17): set the new capacity and evict down to it.  Unlike
+        ``configure_cache``'s rebuild, surviving entries keep serving hits —
+        a shrink sheds only the coldest bytes, a grow is free."""
+        with self._mu:
+            self.capacity_bytes = int(capacity_bytes)
+            while self._bytes > self.capacity_bytes and self._entries:
+                self._evict_one()
+
     # ------------------------------------------------------------- pin control
     def set_pinned(self, blocks: Dict[CacheKey, int]) -> None:
         """Replace the pinned set (the DRAM-resident L0) wholesale.
@@ -415,6 +426,15 @@ class BlockCacheView:
         self.namespace = namespace
         self.budget_bytes = int(budget_bytes)
         cache.set_ns_budget(namespace, budget_bytes)
+
+    def resize(self, budget_bytes: int) -> None:
+        """Retarget this namespace's admission budget (tuner cache-budget
+        shifting, DESIGN.md §17).  Gentle: entries over the new budget are
+        not dropped eagerly — the namespace-first eviction loop sheds them
+        on the shard's own subsequent admissions, so a budget shuffle never
+        costs a cold sibling its working set up front."""
+        self.budget_bytes = int(budget_bytes)
+        self.cache.set_ns_budget(self.namespace, self.budget_bytes)
 
     # ---------------------------------------------------- cache protocol
     def read_block(self, run_id, block_id: int, nbytes: int,

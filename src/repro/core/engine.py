@@ -29,6 +29,7 @@ view-rebuild) emit trace events.
 from __future__ import annotations
 
 import dataclasses
+import math
 import threading
 import time
 from typing import Iterable, List, Optional, Sequence, Tuple
@@ -45,6 +46,7 @@ from .policy import CompactionTask, MergePolicy, make_policy
 from .run import SortedRun, build_run, merge_runs
 from .scheduler import CompactJob, CompactionScheduler, FlushJob
 from .telemetry import Telemetry
+from .tuner import OnlineTuner, TunerStep
 from .types import (BLOCK_SIZE, KEY_BYTES, KEY_DTYPE, SEQ_DTYPE,
                     TOMBSTONE_LEN, IOStats, StatsHub)
 from .view import RangeView, build_range_view
@@ -167,6 +169,20 @@ class LSMConfig:
                                         # backoff, §16.3); past it the job
                                         # is abandoned and the store
                                         # degrades read-only
+    tuner: Optional[OnlineTuner] = None
+                                        # online workload-adaptive tuner
+                                        # (DESIGN.md §17): senses windowed
+                                        # IOStats/Telemetry deltas and
+                                        # hill-climbs c/T, the cache↔pin
+                                        # split, slowdown_trigger, and the
+                                        # facade's worker budget — applied
+                                        # only at compaction-chain/quiesce
+                                        # boundaries via apply_tuning().
+                                        # None (default): zero overhead
+                                        # beyond one `is None` test per
+                                        # write, same contract as telemetry.
+                                        # Needs `telemetry` to sense; inert
+                                        # without it.
 
 
 class LSMStore:
@@ -211,6 +227,16 @@ class LSMStore:
         # triplet between worker installs and snapshot releases.
         self._imm: List[ImmutableMemtable] = []
         self._maint_lock = threading.Lock()
+        # Online tuning (DESIGN.md §17).  The tuner is cached on the store
+        # so the per-write check is one attribute + `is None` test (the
+        # telemetry zero-overhead contract); bind() makes this store the
+        # single driver — sharded facades hand shards tuner=None configs
+        # and bind the facade instead.
+        self._tuner = self.config.tuner
+        self._tune_ops = 0
+        self._tune_armed = False
+        if self._tuner is not None:
+            self._tuner.bind(self)
         # REMIX-style cross-run range view (DESIGN.md §13).  The view is a
         # snapshot of one published ``self._levels`` object; freshness is a
         # pointer compare (copy-on-write installs swap the list object), so
@@ -327,19 +353,23 @@ class LSMStore:
         tel = self.config.telemetry
         if tel is None:
             self._write(key, value)
-            return
-        t0 = time.perf_counter_ns()
-        self._write(key, value)
-        tel.record("put", time.perf_counter_ns() - t0)
+        else:
+            t0 = time.perf_counter_ns()
+            self._write(key, value)
+            tel.record("put", time.perf_counter_ns() - t0)
+        if self._tuner is not None:
+            self._maybe_tune(1)
 
     def delete(self, key: int):
         tel = self.config.telemetry
         if tel is None:
             self._write(key, None)
-            return
-        t0 = time.perf_counter_ns()
-        self._write(key, None)
-        tel.record("put", time.perf_counter_ns() - t0)
+        else:
+            t0 = time.perf_counter_ns()
+            self._write(key, None)
+            tel.record("put", time.perf_counter_ns() - t0)
+        if self._tuner is not None:
+            self._maybe_tune(1)
 
     def _write(self, key: int, value: Optional[bytes]):
         if self._degraded is not None:
@@ -370,10 +400,12 @@ class LSMStore:
         tel = self.config.telemetry
         if tel is None:
             self._write_batch(zip(keys, values))
-            return
-        t0 = time.perf_counter_ns()
-        self._write_batch(zip(keys, values))
-        tel.record("put_batch", time.perf_counter_ns() - t0)
+        else:
+            t0 = time.perf_counter_ns()
+            self._write_batch(zip(keys, values))
+            tel.record("put_batch", time.perf_counter_ns() - t0)
+        if self._tuner is not None:
+            self._maybe_tune(len(keys))
 
     def delete_batch(self, keys) -> None:
         """Batched deletes: semantically ``[delete(k) for k in keys]``."""
@@ -383,10 +415,12 @@ class LSMStore:
         tel = self.config.telemetry
         if tel is None:
             self._write_batch(ops)
-            return
-        t0 = time.perf_counter_ns()
-        self._write_batch(ops)
-        tel.record("write_batch", time.perf_counter_ns() - t0)
+        else:
+            t0 = time.perf_counter_ns()
+            self._write_batch(ops)
+            tel.record("write_batch", time.perf_counter_ns() - t0)
+        if self._tuner is not None:
+            self._maybe_tune(1)
 
     def _write_batch(self, ops: Iterable[Tuple[int, Optional[bytes]]]) -> None:
         """Batched puts + deletes (value=None), the vectorized ingest lane.
@@ -612,12 +646,170 @@ class LSMStore:
         if self._scheduler is None:
             return True
         try:
-            return self._scheduler.wait_for_quiesce(timeout)
+            ok = self._scheduler.wait_for_quiesce(timeout)
         except RuntimeError:
             # the pipeline failure has now been surfaced to the caller;
             # close() afterwards is an idempotent no-raise cleanup
             self._bg_failure_surfaced = True
             raise
+        if ok and self._tuner is not None and self._tune_armed:
+            # a drained pipeline is a tuning boundary too (§17)
+            self.apply_tuning()
+        return ok
+
+    # --------------------------------------------- online tuning (§17)
+    def _maybe_tune(self, k: int = 1) -> None:
+        """Cheap write-boundary tuning trigger (the facade's
+        ``_maybe_rebalance`` shape): count ops; once ``interval_ops``
+        elapse, arm, and fire at the first compaction-chain boundary —
+        immediately in sync mode (every inter-op point is one), at the
+        next scheduler-idle check in async mode."""
+        tun = self._tuner
+        self._tune_ops += k
+        if not self._tune_armed:
+            if self._tune_ops < tun.interval_ops:
+                return
+            self._tune_armed = True
+        sched = self._scheduler
+        if sched is not None and not sched.idle():
+            return
+        self._tune_ops = 0
+        self._tune_armed = False
+        tun.tick(self)
+
+    def apply_tuning(self) -> Optional[TunerStep]:
+        """Run one tuner tick now iff the store is at a boundary.
+
+        The single actuation entry point (DESIGN.md §17): changes land only
+        here — with the scheduler idle (sync mode always is, between ops) —
+        so COW readers and the bit-for-bit oracles are never perturbed
+        mid-op.  Returns the decision, or None when not at a boundary, the
+        tuner is absent/unbound, or the window was too small to decide.
+        """
+        tun = self._tuner
+        if tun is None:
+            return None
+        if self._scheduler is not None and not self._scheduler.idle():
+            return None
+        self._tune_ops = 0
+        self._tune_armed = False
+        return tun.tick(self)
+
+    def retune_policy(self, *, T: Optional[float] = None,
+                      c: Optional[float] = None) -> None:
+        """Swap in a same-family policy with new knobs (tuner actuator).
+
+        Only *future* ``plan()`` calls see the new capacities — the
+        installed tree is never rewritten; overflow against the new
+        schedule resolves through normal compaction churn.  The swap is a
+        single reference assignment; call at a boundary (``apply_tuning``
+        does) so no planned-but-unapplied task straddles the change."""
+        cfg = self.config
+        if T is not None:
+            cfg.T = float(T)
+        if c is not None:
+            cfg.c = float(c)
+        self.policy = self.policy.retuned(T=cfg.T, c=cfg.c)
+
+    def set_cache_split(self, pin_l0_bytes: int) -> None:
+        """Move budget between the block cache and the pinned-L0 slice at
+        constant total memory (tuner actuator).  Gentle, unlike
+        ``configure_cache``: the cache resizes in place (a shrink sheds
+        only its coldest bytes) and the L0 repins under the new budget."""
+        if self.block_cache is None or self.pinned_l0 is None:
+            return
+        cfg = self.config
+        total = cfg.cache_bytes + cfg.pin_l0_bytes
+        pin = max(0, min(int(pin_l0_bytes), total))
+        cfg.pin_l0_bytes = pin
+        cfg.cache_bytes = total - pin
+        self.block_cache.resize(cfg.cache_bytes)
+        self.pinned_l0.pin_l0_bytes = pin
+        with self._maint_lock:
+            self.pinned_l0.repin(self._levels[0], stats=self._stats.local())
+
+    def compact_to_shape(self, max_merges: int = 64) -> int:
+        """Maintenance compaction: fold the tree to the policy's shape.
+
+        ``retune_policy`` deliberately never rewrites the installed tree —
+        but when a retune *widens* the capacity schedule (larger ``T``,
+        smaller ``c``) every level of the old, deeper shape sits under its
+        new cap, so no organic compaction ever fires and reads keep paying
+        the old shape's per-level cost indefinitely.  This is the explicit
+        maintenance window (RocksDB's manual ``CompactRange`` shape): merge
+        the shallowest populated deep level into the next one until the
+        populated-level count matches ``policy.predicted_levels`` for the
+        current data size, then let the normal planner settle any overflow
+        the folding introduced.  L0 is left to its own trigger (it is the
+        flush buffer, usually DRAM-pinned).  Runs through the same
+        ``_apply`` as every other compaction, so COW publication, cache
+        retention, and view invalidation all hold.  Call at a quiesce
+        boundary (async callers drain first; returns 0 when not idle).
+        Returns the number of maintenance merges performed.
+        """
+        if self._scheduler is not None and not self._scheduler.idle():
+            return 0
+        self._compact_until_quiet()     # settle organic triggers first
+        pred = getattr(self.policy, "predicted_levels", None)
+        merges = 0
+        while merges < max_merges:
+            deep = [i for i, lvl in enumerate(self._levels) if lvl and i >= 1]
+            if len(deep) < 2 or pred is None:
+                break
+            total = sum(r.data_bytes
+                        for lvl in self._levels for r in lvl)
+            target = max(1, int(math.ceil(
+                pred(total, self.config.base_level_bytes))))
+            if len(deep) <= target:
+                break
+            src, dst = deep[0], deep[1]
+            task = CompactionTask(
+                src, dst, True, "reshape",
+                src_run_ids=tuple(r.run_id for r in self._levels[src]))
+            if not self._apply(task):
+                break       # tree changed under us: stop, planner recovers
+            merges += 1
+        if merges:
+            # the folds changed level sizes; re-settle, then drop the
+            # monotone level-count watermark to the real new depth so
+            # future capacity schedules price the reshaped tree
+            self._compact_until_quiet()
+            self._max_level = max(
+                (i for i, lvl in enumerate(self._levels) if lvl), default=1)
+            tel = self.config.telemetry
+            if tel is not None:
+                tel.emit("reshape", merges=merges,
+                         levels=len([l for l in self._levels if l]))
+        return merges
+
+    def _tuning_actuators(self):
+        """Knob accessors the tuner hill-climbs: {name: (get, set)}.
+
+        Only knobs that exist on this store are offered — no ``pin_frac``
+        without a memory subsystem, no ``slowdown_trigger`` without the
+        async pressure path (sync mode never throttles).  The facade
+        overrides this with its shard-wide twin."""
+        acts = {
+            "c": (lambda: self.policy.c,
+                  lambda v: self.retune_policy(c=v)),
+            "T": (lambda: self.policy.T,
+                  lambda v: self.retune_policy(T=v)),
+        }
+        if self._scheduler is not None:
+            acts["slowdown_trigger"] = (
+                lambda: self.config.slowdown_trigger,
+                lambda v: setattr(self.config, "slowdown_trigger", int(v)))
+        if self.block_cache is not None and self.pinned_l0 is not None:
+            acts["pin_frac"] = (self._get_pin_frac, self._set_pin_frac)
+        return acts
+
+    def _get_pin_frac(self) -> float:
+        total = self.config.cache_bytes + self.config.pin_l0_bytes
+        return self.config.pin_l0_bytes / total if total else 0.0
+
+    def _set_pin_frac(self, v: float) -> None:
+        total = self.config.cache_bytes + self.config.pin_l0_bytes
+        self.set_cache_split(int(total * float(v)))
 
     def close(self) -> None:
         """Drain and stop the background workers (async mode).

@@ -63,6 +63,18 @@ class MergePolicy:
         self.c = float(c)
         self.l0_trigger = int(l0_trigger)
 
+    def retuned(self, *, T: Optional[float] = None,
+                c: Optional[float] = None) -> "MergePolicy":
+        """A fresh policy of the same family with adjusted knobs — the
+        online tuner's level-ratio actuator (DESIGN.md §17).  The caller
+        swaps it in at a compaction-chain boundary; only *future* ``plan``
+        calls see the new capacities, so the installed tree is never
+        rewritten (Garnering's capacities are pure functions of (i, L, B),
+        no state carries over)."""
+        return type(self)(T=self.T if T is None else T,
+                          c=self.c if c is None else c,
+                          l0_trigger=self.l0_trigger)
+
     # -- shape -----------------------------------------------------------
     def capacity(self, i: int, L: int, B: int) -> float:
         raise NotImplementedError

@@ -88,6 +88,62 @@ def _pin_worker_to_spare_core(offset: int = 0) -> None:
         pass
 
 
+class WorkerBudget:
+    """Resizable counting semaphore for the cross-shard worker budget.
+
+    Drop-in for the plain ``threading.Semaphore`` the sharded facade hands
+    its per-shard schedulers (DESIGN.md §12) — workers ``acquire``/``release``
+    around each job exactly as before — plus :meth:`resize`, the online
+    tuner's worker-reallocation actuator (§17).  Grow is always safe
+    (permits are minted).  Shrink only retires *free* permits, non-blocking:
+    the caller invokes it at a quiesce/idle boundary where every permit is
+    home; if a straggler still holds one, the shrink aborts cleanly (False)
+    rather than blocking the foreground or stranding a worker.
+    """
+
+    def __init__(self, n: int):
+        self._size = max(1, int(n))
+        self._sem = threading.Semaphore(self._size)
+        self._mu = threading.Lock()
+
+    @property
+    def size(self) -> int:
+        return self._size
+
+    def acquire(self, *args, **kwargs):
+        return self._sem.acquire(*args, **kwargs)
+
+    def release(self) -> None:
+        self._sem.release()
+
+    # `with budget:` — same protocol as threading.Semaphore
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def resize(self, n: int) -> bool:
+        """Retarget the budget to ``n`` permits; True iff it landed."""
+        n = max(1, int(n))
+        with self._mu:
+            delta = n - self._size
+            if delta > 0:
+                for _ in range(delta):
+                    self._sem.release()
+            elif delta < 0:
+                got = 0
+                for _ in range(-delta):
+                    if not self._sem.acquire(blocking=False):
+                        for _ in range(got):   # roll back: all-or-nothing
+                            self._sem.release()
+                        return False
+                    got += 1
+            self._size = n
+            return True
+
+
 class FlushJob:
     """Turn one immutable memtable into an L0 run + version install."""
 

@@ -89,7 +89,8 @@ from .cache import BlockCache, BlockCacheView
 from .engine import LSMConfig, LSMStore
 from .manifest import Version
 from .run import build_run
-from .scheduler import CompactJob
+from .scheduler import CompactJob, WorkerBudget
+from .tuner import TunerStep
 from .types import KEY_DTYPE, IOStats
 
 _KEY_SPACE_END = 1 << 64
@@ -186,12 +187,16 @@ class ShardedLSMStore:
         # one-job-at-a-time determinism turnstile).
         self._budget = None
         if self.config.async_compaction:
-            self._budget = threading.Semaphore(
+            # resizable: the online tuner's worker-reallocation actuator
+            # retargets it at quiesce boundaries (DESIGN.md §17)
+            self._budget = WorkerBudget(
                 max(1, int(self.config.compaction_workers)))
         shard_cfg = dataclasses.replace(
             self.config, shards=1, shard_splitters=None,
             cache_bytes=0, pin_l0_bytes=0,   # cache is shared, attached below
-            compaction_workers=1)            # 1 worker thread per shard pool
+            compaction_workers=1,            # 1 worker thread per shard pool
+            tuner=None)                      # facade drives the one tuner;
+                                             # shards must not double-drive
         self.shards: List[LSMStore] = [
             LSMStore(dataclasses.replace(shard_cfg),
                      scheduler_budget=self._budget, scheduler_offset=i)
@@ -239,6 +244,16 @@ class ShardedLSMStore:
         self.block_cache: Optional[BlockCache] = None
         if self.config.cache_bytes > 0 or self.config.pin_l0_bytes > 0:
             self._build_shared_cache()
+        # Online tuning (DESIGN.md §17): the facade is the tuner's single
+        # driver (shard configs carried tuner=None at construction, so the
+        # shards' own write paths never tick it); same cheap armed-counter
+        # trigger shape as rebalancing.
+        self._tuner = self.config.tuner
+        self._tune_ops = 0
+        self._tune_armed = False
+        self._tune_prev_shard_stats: Optional[List[IOStats]] = None
+        if self._tuner is not None:
+            self._tuner.bind(self)
 
     # ------------------------------------------------------------ partition
     @property
@@ -327,6 +342,8 @@ class ShardedLSMStore:
             self.shards[si].put(key, value)
             self._note_key(si, key)
         self._maybe_rebalance()
+        if self._tuner is not None:
+            self._maybe_tune(1)
 
     def delete(self, key: int) -> None:
         with self._write_gate:
@@ -334,6 +351,8 @@ class ShardedLSMStore:
             self.shards[si].delete(key)
             self._note_key(si, key)
         self._maybe_rebalance()
+        if self._tuner is not None:
+            self._maybe_tune(1)
 
     def put_batch(self, keys, values) -> None:
         """Batched puts, split per shard by one vectorized searchsorted.
@@ -350,6 +369,8 @@ class ShardedLSMStore:
                     self.shards[int(si)].put_batch(sel.tolist(), val)
                     self._note_keys(int(si), sel)
             self._maybe_rebalance()
+            if self._tuner is not None:
+                self._maybe_tune(int(keys_arr.size))
             return
         self.write_batch(zip(keys, values))
 
@@ -377,12 +398,16 @@ class ShardedLSMStore:
                 self.shards[int(si)].write_batch(pairs[int(j)] for j in idx)
                 self._note_keys(int(si), keys_arr[idx])
         self._maybe_rebalance()
+        if self._tuner is not None:
+            self._maybe_tune(len(pairs))
 
     def flush(self) -> None:
         with self._write_gate:
             for s in self.shards:
                 s.flush()
         self._maybe_rebalance()
+        if self._tuner is not None:
+            self._maybe_tune(0)
 
     def fsync_wal(self) -> None:
         """Durability barrier on every shard's active WAL."""
@@ -871,6 +896,166 @@ class ShardedLSMStore:
                 s.block_cache.budget_bytes = budgets[i]
             self.block_cache.set_ns_budget(i, budgets[i])
 
+    # --------------------------------------------- online tuning (§17)
+    def _shards_idle(self) -> bool:
+        """True at a facade-wide compaction-chain boundary (sync shards
+        are always at one)."""
+        return all(s._scheduler is None or s._scheduler.idle()
+                   for s in self.shards)
+
+    def _maybe_tune(self, k: int = 0) -> None:
+        """Write-boundary tuning trigger (the ``_maybe_rebalance`` shape):
+        count routed ops, arm at ``interval_ops``, fire at the first
+        all-shards-idle boundary."""
+        tun = self._tuner
+        self._tune_ops += k
+        if not self._tune_armed:
+            if self._tune_ops < tun.interval_ops:
+                return
+            self._tune_armed = True
+        if not self._shards_idle():
+            return
+        self._tune_ops = 0
+        self._tune_armed = False
+        with self._write_gate:
+            tun.tick(self)
+
+    def apply_tuning(self) -> Optional[TunerStep]:
+        """Run one tuner tick now iff every shard is at a boundary — the
+        facade twin of ``LSMStore.apply_tuning`` (DESIGN.md §17).  Taken
+        under the write gate so a concurrent snapshot can never observe a
+        half-applied actuation."""
+        tun = self._tuner
+        if tun is None or not self._shards_idle():
+            return None
+        self._tune_ops = 0
+        self._tune_armed = False
+        with self._write_gate:
+            return tun.tick(self)
+
+    def compact_to_shape(self, timeout: Optional[float] = 600.0) -> int:
+        """Maintenance reshape across shards (``LSMStore.compact_to_shape``):
+        drain every shard, then fold each shard's tree to its (re)tuned
+        policy's predicted level count.  Foreground, under the write gate —
+        the explicit maintenance window after a policy retune widened the
+        capacity schedule.  Returns total maintenance merges."""
+        with self._write_gate:
+            if not self.wait_for_quiesce(timeout):
+                return 0
+            return sum(s.compact_to_shape() for s in self.shards)
+
+    def retune_policy(self, *, T: Optional[float] = None,
+                      c: Optional[float] = None) -> None:
+        """Swap every shard's policy to a same-family one with new knobs
+        (tuner actuator); future compaction targets only, trees never
+        rewritten."""
+        cfg = self.config
+        if T is not None:
+            cfg.T = float(T)
+        if c is not None:
+            cfg.c = float(c)
+        for s in self.shards:
+            s.policy = s.policy.retuned(T=cfg.T, c=cfg.c)
+
+    def resize_worker_budget(self, n: int) -> bool:
+        """Retarget the shared worker-budget semaphore (tuner actuator).
+        Shrinks only land when the permits are free — apply_tuning calls
+        this at an all-idle boundary, where they are."""
+        if self._budget is None:
+            return False
+        ok = self._budget.resize(n)
+        if ok:
+            self.config.compaction_workers = self._budget.size
+        return ok
+
+    def set_cache_split(self, pin_l0_bytes: int) -> None:
+        """Facade twin of ``LSMStore.set_cache_split``: move budget between
+        the shared cache and the per-shard pinned-L0 slices at constant
+        total memory.  Gentle — the shared cache evicts down in place and
+        each namespace budget rescales proportionally (preserving any
+        miss-weighted skew the budget rule has built up); no contents are
+        dropped wholesale."""
+        if self.block_cache is None:
+            return
+        cfg = self.config
+        total = cfg.cache_bytes + cfg.pin_l0_bytes
+        pin = max(0, min(int(pin_l0_bytes), total))
+        cache = total - pin
+        scale = cache / cfg.cache_bytes if cfg.cache_bytes > 0 else 0.0
+        cfg.cache_bytes = cache
+        cfg.pin_l0_bytes = pin
+        self.block_cache.resize(cache)
+        n = len(self.shards)
+        per_pin = pin // n
+        for s in self.shards:
+            v = s.block_cache
+            if v is not None:
+                v.resize(int(v.budget_bytes * scale) if scale > 0
+                         else cache // n)
+            if s.pinned_l0 is not None:
+                s.pinned_l0.pin_l0_bytes = per_pin
+                with s._maint_lock:
+                    s.pinned_l0.repin(s._levels[0], stats=s._stats.local())
+
+    def _get_pin_frac(self) -> float:
+        total = self.config.cache_bytes + self.config.pin_l0_bytes
+        return self.config.pin_l0_bytes / total if total else 0.0
+
+    def _set_pin_frac(self, v: float) -> None:
+        total = self.config.cache_bytes + self.config.pin_l0_bytes
+        self.set_cache_split(int(total * float(v)))
+
+    def _tuning_actuators(self):
+        """Facade knob set: level ratios fan out to every shard; pressure
+        and worker knobs act on the shared config/budget."""
+        acts = {
+            "c": (lambda: self.shards[0].policy.c,
+                  lambda v: self.retune_policy(c=v)),
+            "T": (lambda: self.shards[0].policy.T,
+                  lambda v: self.retune_policy(T=v)),
+        }
+        if self.config.async_compaction:
+            acts["slowdown_trigger"] = (
+                lambda: self.config.slowdown_trigger,
+                lambda v: setattr(self.config, "slowdown_trigger", int(v)))
+        if self._budget is not None:
+            acts["compaction_workers"] = (lambda: self._budget.size,
+                                          self.resize_worker_budget)
+        if self.block_cache is not None and self.config.cache_bytes \
+                + self.config.pin_l0_bytes > 0:
+            acts["pin_frac"] = (self._get_pin_frac, self._set_pin_frac)
+        return acts
+
+    def _tuning_rules(self, window, stats_delta) -> None:
+        """Rule-based actuation the tuner runs every tick (no hill-climb):
+        shift shared-cache namespace budgets toward hit-rate-starved
+        shards.  Same floor/weighting shape as the rebalance-time
+        ``_reassign_cache_budgets``, but weighted by each shard's *window*
+        cache misses (the starvation signal) instead of routed ops."""
+        if self.block_cache is None or self.config.cache_bytes <= 0:
+            return
+        cur = [s.stats for s in self.shards]
+        prev = self._tune_prev_shard_stats
+        self._tune_prev_shard_stats = cur
+        if prev is None:
+            return
+        misses = [c.delta(p).cache_miss_blocks
+                  for c, p in zip(cur, prev)]
+        if sum(misses) <= 0:
+            return
+        total = self.config.cache_bytes
+        n = len(self.shards)
+        base = (sum(misses) + n) // (3 * n) + 1   # floor ≈ 1/(4N) share
+        w = [m + base for m in misses]
+        wsum = sum(w)
+        budgets = [total * wi // wsum for wi in w]
+        budgets[max(range(n), key=lambda i: w[i])] += total - sum(budgets)
+        for i, s in enumerate(self.shards):
+            if s.block_cache is not None:
+                s.block_cache.resize(budgets[i])
+            else:
+                self.block_cache.set_ns_budget(i, budgets[i])
+
     # ------------------------------------------------------------ recovery
     def crash(self) -> None:
         """Whole-store crash: every shard aborts its background pipeline and
@@ -927,6 +1112,8 @@ class ShardedLSMStore:
         ok = self._drain_shards(deadline)
         if ok and not self._in_rebalance and self._maybe_rebalance():
             ok = self._drain_shards(deadline)
+        if ok and self._tuner is not None and self._tune_armed:
+            self.apply_tuning()
         return ok
 
     def _drain_shards(self, deadline: Optional[float]) -> bool:

@@ -51,7 +51,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 __all__ = ["LatencyHistogram", "EventTrace", "TraceEvent", "Telemetry",
-           "OP_CLASSES"]
+           "TelemetrySnapshot", "TelemetryWindow", "OP_CLASSES"]
 
 # Per-op-class latency histograms the engine records (benchmarks may add
 # their own classes; the Telemetry facade accepts any string key).
@@ -144,10 +144,14 @@ class LatencyHistogram:
 
     # ------------------------------------------------------------- queries
     def percentile(self, p: float) -> float:
-        """Nearest-rank percentile, reported as the geometric midpoint of
-        the bucket holding the rank-th smallest sample (so the true sample
-        value is always within one bucket — a factor sqrt(2) — of the
-        returned estimate; tests assert bucket equality exactly)."""
+        """Nearest-rank percentile, geometrically interpolated *within* the
+        bucket holding the rank-th smallest sample by the rank's position
+        among that bucket's samples.  The estimate always stays inside the
+        bucket (tests assert bucket equality exactly; a lone sample gets
+        the geometric midpoint, as before), but unlike a fixed midpoint it
+        moves smoothly as the tail mass shifts — the online tuner's
+        objective (§17) needs that resolution to see a gradient between
+        windows whose p99 lands in the same half-octave bucket."""
         if self.n == 0:
             return float("nan")
         rank = max(1, math.ceil(self.n * float(p) / 100.0))
@@ -155,7 +159,12 @@ class LatencyHistogram:
         i = int(np.searchsorted(cum, rank))
         lo = max(int(BUCKET_EDGES[i]), 1)
         hi = max(int(_UPPER[i]), lo)
-        return math.sqrt(lo * hi)
+        if hi <= lo:
+            return float(lo)
+        before = int(cum[i - 1]) if i else 0
+        cnt = int(self.counts[i])
+        frac = (rank - before - 0.5) / cnt if cnt else 0.5
+        return lo * (hi / lo) ** frac
 
     def mean(self) -> float:
         return self.sum_ns / self.n if self.n else float("nan")
@@ -188,6 +197,20 @@ class LatencyHistogram:
         out = LatencyHistogram()
         for h in hists:
             out = out + h
+        return out
+
+    def diff(self, prev: "LatencyHistogram") -> "LatencyHistogram":
+        """Windowed delta ``self - prev`` (counts/n/sum_ns are monotonic, so
+        the subtraction is the interval's histogram — the sensing primitive
+        behind :meth:`Telemetry.delta`, DESIGN.md §17).  ``max_ns``/``min_ns``
+        are not subtractable; the window keeps the lifetime extremes, which
+        only ever *widen* a percentile caller's view, never narrow it."""
+        out = LatencyHistogram()
+        out.counts = self.counts - prev.counts
+        out.n = self.n - prev.n
+        out.sum_ns = self.sum_ns - prev.sum_ns
+        out.max_ns = self.max_ns
+        out.min_ns = self.min_ns
         return out
 
     def to_dict(self) -> Dict[str, float]:
@@ -287,6 +310,38 @@ class EventTrace:
         return "\n".join(lines)
 
 
+class TelemetrySnapshot:
+    """Point-in-time capture for windowed-delta sensing (DESIGN.md §17):
+    the merged per-op histograms plus the trace cursor.  Pair two of these
+    with :meth:`Telemetry.delta` to get an interval's histograms and events
+    without re-merging full histories each tick."""
+
+    __slots__ = ("hists", "cursor")
+
+    def __init__(self, hists: Dict[str, LatencyHistogram], cursor: int):
+        self.hists = hists
+        self.cursor = cursor
+
+
+class TelemetryWindow:
+    """One sensing interval: per-op histogram *diffs* (only classes with
+    samples in the window), the trace events emitted during it, and the
+    end snapshot (pass as ``prev`` to chain the next window for free)."""
+
+    __slots__ = ("hists", "events", "end")
+
+    def __init__(self, hists: Dict[str, LatencyHistogram],
+                 events: List[TraceEvent], end: TelemetrySnapshot):
+        self.hists = hists
+        self.events = events
+        self.end = end
+
+    @property
+    def ops(self) -> int:
+        """Total samples across the window's op classes."""
+        return sum(h.n for h in self.hists.values())
+
+
 class Telemetry:
     """Facade: per-op-class latency histograms + one event trace.
 
@@ -346,6 +401,28 @@ class Telemetry:
 
     def percentile(self, op: str, p: float) -> float:
         return self.histogram(op).percentile(p)
+
+    # ------------------------------------------------- windowed-delta API
+    def snapshot(self) -> TelemetrySnapshot:
+        """Capture the merged histograms + trace cursor (allocation-light:
+        one small int64 array per active op class; no locks taken — the
+        merge reads the same GIL-atomic shard list ``histograms`` does)."""
+        return TelemetrySnapshot(self.histograms(), self.trace.last_seq)
+
+    def delta(self, prev: TelemetrySnapshot) -> TelemetryWindow:
+        """The interval since ``prev``: histogram diffs for every op class
+        that recorded samples, plus ``EventTrace.since(prev.cursor)``
+        events.  The online tuner and ``serve_latency``'s tail attribution
+        both sense through this instead of re-merging full histories."""
+        end = self.snapshot()
+        hists: Dict[str, LatencyHistogram] = {}
+        for op, h in end.hists.items():
+            p = prev.hists.get(op)
+            d = h.diff(p) if p is not None else h
+            if d.n > 0:
+                hists[op] = d
+        events, _ = self.trace.since(prev.cursor)
+        return TelemetryWindow(hists, events, end)
 
     def summary(self) -> Dict[str, Dict[str, float]]:
         """{op: histogram row} over every recorded op class (stable order:

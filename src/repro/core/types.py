@@ -161,6 +161,17 @@ class StatsHub:
         """Fieldwise sum of all shards (a fresh IOStats; shards unmutated)."""
         return IOStats.merge(list(self._shards))
 
+    # ------------------------------------------------- windowed-delta API
+    def snapshot(self) -> IOStats:
+        """A fresh merged capture — the pair of :meth:`delta`, mirroring
+        ``Telemetry.snapshot()``/``delta()`` so interval consumers (the
+        online tuner, DESIGN.md §17) sense both sources the same way."""
+        return self.merged()
+
+    def delta(self, prev: IOStats) -> IOStats:
+        """Counter diffs accumulated since ``prev`` (a :meth:`snapshot`)."""
+        return self.merged().delta(prev)
+
 
 def entry_bytes(val_len: int, key_bytes: int = KEY_BYTES) -> int:
     """Physical size of one entry (tombstones carry only the key)."""

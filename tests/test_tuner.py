@@ -1,0 +1,287 @@
+"""Online tuner (DESIGN.md §17): tuning never changes data, knobs stay
+bounded, actuation lands only at boundaries.
+
+The headline property is the differential one: a store under *active*
+tuning (knobs genuinely moving mid-stream) must stay bit-for-bit
+read-identical to an untuned twin fed the same ops — the controller may
+reshape the tree (levels can differ), never the data.  Runs under both
+real hypothesis and the fixed-seed shim (tests/_hypothesis_compat.py).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KNOB_BOUNDS, LSMConfig, LSMStore, OnlineTuner,
+                        Telemetry, make_store)
+from repro.core.scheduler import WorkerBudget
+
+
+def tuned_cfg(**kw):
+    """Tiny store with an aggressive tuner: ticks every 8 writes, decides
+    on any non-empty window, so knobs actually move inside small tests."""
+    base = dict(policy="garnering", T=2.0, c=1.0, memtable_bytes=1 << 9,
+                base_level_bytes=1 << 11, bits_per_key=10,
+                bloom_allocation="monkey", cache_bytes=1 << 14,
+                pin_l0_bytes=1 << 13, telemetry=Telemetry(),
+                tuner=OnlineTuner(interval_ops=8, min_window_ops=1,
+                                  tolerance=0.0))
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def plain_cfg(**kw):
+    base = dict(policy="garnering", T=2.0, c=1.0, memtable_bytes=1 << 9,
+                base_level_bytes=1 << 11, bits_per_key=10,
+                bloom_allocation="monkey")
+    base.update(kw)
+    return LSMConfig(**base)
+
+
+def assert_reads_identical(db, twin, universe):
+    """get / multi_get / scan / scan_scalar bit-for-bit across the twins."""
+    for k in universe:
+        assert db.get(k) == twin.get(k), k
+    keys = np.asarray(list(universe), np.uint64)
+    assert db.multi_get(keys) == twin.multi_get(keys)
+    n = len(universe) + 4
+    assert db.scan(0, n) == twin.scan(0, n)
+    assert db.scan_scalar(0, n) == twin.scan_scalar(0, n)
+
+
+# ------------------------------------------------------- differential twin
+@given(st.lists(st.tuples(st.sampled_from(["put", "del", "get"]),
+                          st.integers(0, 80)), min_size=20, max_size=300))
+@settings(max_examples=25, deadline=None)
+def test_tuned_store_reads_bit_identical(ops):
+    db = LSMStore(tuned_cfg())
+    twin = LSMStore(plain_cfg())
+    tun = db.config.tuner
+    for i, (op, k) in enumerate(ops):
+        if op == "put":
+            v = f"{i}".encode()
+            db.put(k, v)
+            twin.put(k, v)
+        elif op == "del":
+            db.delete(k)
+            twin.delete(k)
+        else:
+            assert db.get(k) == twin.get(k), k
+    db.flush()
+    twin.flush()
+    db.apply_tuning()
+    assert_reads_identical(db, twin, range(81))
+    # the tuner must have actually driven knobs for this to mean anything
+    if len(ops) >= 60:
+        assert tun.ticks > 0
+    for s in tun.steps:
+        for k, v in s.knobs.items():
+            lo, hi = KNOB_BOUNDS[k]
+            assert lo - 1e-9 <= v <= hi + 1e-9, (k, v)
+
+
+def test_tuned_sharded_matches_single_oracle():
+    tel = Telemetry()
+    cfg = tuned_cfg(shards=2, async_compaction=True, compaction_workers=2,
+                    telemetry=tel,
+                    tuner=OnlineTuner(interval_ops=64, min_window_ops=1,
+                                      tolerance=0.0))
+    db = make_store(cfg)
+    twin = LSMStore(plain_cfg())
+    rng = np.random.default_rng(3)
+    keys = rng.integers(0, 1 << 40, 3_000, dtype=np.uint64)
+    for wave in range(6):
+        lo, hi = wave * 500, (wave + 1) * 500
+        for k in keys[lo:hi]:
+            v = f"w{wave}k{int(k)}".encode()
+            db.put(int(k), v)
+            twin.put(int(k), v)
+        for k in keys[max(0, lo - 200):lo:7]:
+            assert db.get(int(k)) == twin.get(int(k))
+        assert db.wait_for_quiesce(60)
+        db.apply_tuning()
+    probe = keys[::5]
+    assert db.multi_get(probe) == twin.multi_get(probe)
+    start = int(keys.min())
+    assert db.scan(start, 200) == twin.scan(start, 200)
+    assert db.scan_scalar(start, 200) == twin.scan_scalar(start, 200)
+    assert db.config.tuner.ticks > 0
+    db.close()
+    twin.close()
+
+
+# ------------------------------------------------------------- knob bounds
+def test_knob_bounds_hold_under_long_drive():
+    db = LSMStore(tuned_cfg())
+    tun = db.config.tuner
+    rng = np.random.default_rng(11)
+    ks = rng.integers(0, 400, 4_000, dtype=np.uint64)
+    for i, k in enumerate(ks):
+        db.put(int(k), b"x" * 24)
+        if i % 3 == 0:
+            db.get(int(ks[i // 2]))
+    assert len(tun.steps) >= 10
+    seen = set()
+    for s in tun.steps:
+        seen.add(s.knob)
+        for k, v in s.knobs.items():
+            lo, hi = KNOB_BOUNDS[k]
+            assert lo - 1e-9 <= v <= hi + 1e-9, (k, v)
+    # round-robin visits every knob the store exposes (c/T/pin_frac here)
+    assert {"c", "T", "pin_frac"} <= seen
+    # ...and the policy object actually tracks the tuned knobs
+    assert db.policy.c == pytest.approx(tun.last_knobs()["c"])
+    assert db.policy.T == pytest.approx(tun.last_knobs()["T"])
+    db.close()
+
+
+def test_bounds_are_policy_family_safe():
+    """Every (c, T) inside KNOB_BOUNDS constructs a valid Garnering policy
+    (the MergePolicy ctor asserts T > 1, 0 < c <= 1)."""
+    from repro.core import make_policy
+    for c in np.linspace(*KNOB_BOUNDS["c"], 5):
+        for T in np.linspace(*KNOB_BOUNDS["T"], 5):
+            p = make_policy("garnering", T=float(T), c=float(c))
+            assert type(p.retuned(c=float(c))) is type(p)
+
+
+# ------------------------------------------------- boundary-only actuation
+def test_apply_only_at_boundary():
+    db = LSMStore(tuned_cfg(async_compaction=True,
+                            memtable_bytes=1 << 9, stall_trigger=10_000,
+                            slowdown_trigger=0))
+    tun = db.config.tuner
+    db._scheduler.pause()
+    for k in range(200):                 # rotations pile up queued jobs
+        db.put(k, b"y" * 40)
+    assert not db._scheduler.idle()
+    before = len(tun.steps)
+    assert db.apply_tuning() is None     # not a boundary: refuse, no step
+    assert len(tun.steps) == before
+    db._scheduler.resume()
+    assert db.wait_for_quiesce(60)
+    for k in range(50):
+        db.put(k, b"z" * 24)
+        db.get(k)
+    assert db.wait_for_quiesce(60)
+    st1 = db.apply_tuning()              # baseline tick at worst
+    for k in range(50):
+        db.get(k)
+    st2 = db.apply_tuning()
+    assert st1 is not None or st2 is not None
+    assert len(tun.steps) > before
+    db.close()
+
+
+def test_second_store_cannot_drive_anothers_tuner():
+    tun = OnlineTuner(interval_ops=8, min_window_ops=1)
+    db = LSMStore(tuned_cfg(tuner=tun))
+    other = LSMStore(tuned_cfg(tuner=tun))   # same tuner: binder loses
+    assert tun.owner is db
+    assert tun.tick(other) is None
+    db.close()
+    other.close()
+
+
+def test_disabled_path_stays_inert():
+    db = LSMStore(plain_cfg())
+    assert db.config.tuner is None and db._tuner is None
+    for k in range(300):
+        db.put(k, b"q" * 16)
+    assert db.apply_tuning() is None
+    db.close()
+
+
+# ------------------------------------------------------------ worker budget
+def test_worker_budget_resize_semantics():
+    b = WorkerBudget(2)
+    assert b.size == 2
+    assert b.resize(4) and b.size == 4
+    assert b.resize(1) and b.size == 1
+    b.acquire()                          # permit in flight: shrink refuses
+    assert b.resize(2) and b.size == 2   # grow is always fine
+    b.acquire()
+    assert not b.resize(1) and b.size == 2
+    b.release()
+    b.release()
+    assert b.resize(1) and b.size == 1
+    with b:                              # context-manager protocol survives
+        assert not b._sem.acquire(blocking=False)
+
+
+# ------------------------------------------------- maintenance reshape (§17)
+def test_compact_to_shape_preserves_reads_and_folds_levels():
+    """Retune to a wider capacity schedule, then fold: the maintenance
+    compaction must consolidate the old deep shape down to the new
+    policy's predicted level count with reads staying bit-for-bit."""
+    db = LSMStore(plain_cfg())          # T=2, c=1: deepest possible shape
+    twin = LSMStore(plain_cfg())
+    for i in range(600):
+        v = f"v{i}".encode()
+        db.put(i % 200, v)
+        twin.put(i % 200, v)
+    db.flush(); twin.flush()
+    deep_before = len([l for l in db._levels if l])
+    db.retune_policy(T=6.0, c=0.4)      # widen: nothing is over-cap now
+    merges = db.compact_to_shape()
+    total = sum(r.data_bytes for lvl in db._levels for r in lvl)
+    import math as _m
+    target = max(1, _m.ceil(db.policy.predicted_levels(
+        total, db.config.base_level_bytes)))
+    deep_after = len([l for i, l in enumerate(db._levels) if l and i >= 1])
+    if deep_before > target + 1:        # there was something to fold
+        assert merges >= 1
+    assert deep_after <= max(target, 1)
+    assert_reads_identical(db, twin, range(200))
+    # idempotent: an in-shape tree is a no-op
+    assert db.compact_to_shape() == 0
+    db.close(); twin.close()
+
+
+def test_facade_compact_to_shape_matches_oracle():
+    tel = Telemetry()
+    tun = OnlineTuner(interval_ops=8, min_window_ops=1, tolerance=0.0)
+    db = make_store(tuned_cfg(telemetry=tel, tuner=tun, shards=2,
+                              async_compaction=True))
+    twin = LSMStore(plain_cfg())
+    for i in range(400):
+        v = f"w{i}".encode()
+        db.put(i % 150, v)
+        twin.put(i % 150, v)
+    assert db.wait_for_quiesce(120)
+    db.retune_policy(T=6.0, c=0.5)
+    db.compact_to_shape()
+    twin.flush()
+    assert_reads_identical(db, twin, range(150))
+    db.close(); twin.close()
+
+
+def test_restore_best_settles_incumbent_within_bounds():
+    db = LSMStore(tuned_cfg())
+    tun = db.config.tuner
+    for i in range(400):
+        db.put(i % 64, f"r{i}".encode())
+        if i % 40 == 39:
+            db.flush()
+            db.apply_tuning()
+    assert len(tun.steps) >= 3
+    # best_knobs pairs vector k with window k+1's objective (reporting API)
+    best = tun.best_knobs()
+    objs = [s.objective for s in tun.steps[1:]]
+    k_best = int(np.argmin(objs))
+    assert best == dict(tun.steps[k_best].knobs)
+    # restore_best reverts the unjudged trailing trial and settles on the
+    # incumbent, clamped to bounds
+    pending = tun._pending
+    restored = tun.restore_best(db)
+    assert tun._pending is None
+    if pending is not None and pending[0] in restored:
+        assert restored[pending[0]] == pytest.approx(pending[1])
+    for k, v in restored.items():
+        lo, hi = KNOB_BOUNDS[k]
+        assert lo - 1e-9 <= v <= hi + 1e-9, (k, v)
+    assert db.policy.c == pytest.approx(restored["c"])
+    assert db.policy.T == pytest.approx(restored["T"])
+    # non-owners can't restore
+    other = LSMStore(plain_cfg())
+    assert tun.restore_best(other) == {}
+    db.close(); other.close()
